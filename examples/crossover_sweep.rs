@@ -1,0 +1,108 @@
+//! Empirical crossover calibration (the measurement behind Fig. 2 and
+//! the `Selector::calibrated` policy).
+//!
+//! For each head dimension d, sweeps sequence length N, timing
+//! rust-emitted PJRT executables of direct- vs efficient-TaylorShift,
+//! locates the empirical intersection N̂₀, and compares it with the
+//! analytical N₀ (Eq. 7) — reproducing the paper's §5.1 observation
+//! that the measured crossover lands past the FLOP-equality point.
+//! Writes `bench_out/crossover.json` consumable by the router.
+//!
+//! Run: `cargo run --release --example crossover_sweep -- --ds 8,16 --quick`
+
+use taylorshift::analysis::transitions;
+use taylorshift::attention::selector;
+use taylorshift::bench_support::{bench, BenchConfig, Table};
+use taylorshift::runtime::emitter::{self, EmitVariant};
+use taylorshift::runtime::Runtime;
+use taylorshift::tensor::Tensor;
+use taylorshift::util::cli::Args;
+use taylorshift::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let ds = args.usize_list("ds").unwrap_or(vec![8, 16, 32]);
+    let quick = args.flag("quick");
+    let rt = Runtime::cpu()?;
+
+    let mut calibration: Vec<(usize, f64)> = Vec::new();
+    let mut json_points = Vec::new();
+
+    for &d in &ds {
+        let n0 = transitions::n0(d as u64);
+        // Sample N around the analytical crossover, log-spaced.
+        let mut ns: Vec<usize> = Vec::new();
+        let lo = (n0 * 0.25).max(64.0);
+        let hi = n0 * (if quick { 3.0 } else { 6.0 });
+        let points = if quick { 6 } else { 10 };
+        for i in 0..points {
+            let f = (lo.ln() + (hi.ln() - lo.ln()) * i as f64 / (points - 1) as f64).exp();
+            ns.push((f / 32.0).round() as usize * 32); // align to 32
+        }
+        ns.dedup();
+
+        let cfg = if quick {
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 10,
+                target_seconds: 0.3,
+            }
+        } else {
+            BenchConfig::from_env()
+        };
+
+        let mut t_direct = Vec::new();
+        let mut t_efficient = Vec::new();
+        println!("\n== d = {d} (analytical N0 = {n0:.0}) ==");
+        let mut table = Table::new(&["N", "direct", "efficient", "winner"]);
+        for &n in &ns {
+            let q = Tensor::randn(&[n, d], 1);
+            let k = Tensor::randn(&[n, d], 2);
+            let v = Tensor::randn(&[n, d], 3);
+            let exe_d = emitter::compile_attention(&rt, EmitVariant::TaylorDirect, n, d, 1.0)?;
+            let exe_e = emitter::compile_attention(&rt, EmitVariant::TaylorEfficient, n, d, 1.0)?;
+            let td = bench(format!("direct_n{n}"), &cfg, || {
+                emitter::run_attention(&exe_d, &q, &k, &v).unwrap();
+            });
+            let te = bench(format!("efficient_n{n}"), &cfg, || {
+                emitter::run_attention(&exe_e, &q, &k, &v).unwrap();
+            });
+            t_direct.push(td.mean_s);
+            t_efficient.push(te.mean_s);
+            table.row(&[
+                n.to_string(),
+                taylorshift::bench_support::fmt_seconds(td.mean_s),
+                taylorshift::bench_support::fmt_seconds(te.mean_s),
+                if td.mean_s < te.mean_s { "direct" } else { "efficient" }.to_string(),
+            ]);
+        }
+        table.print();
+
+        match selector::calibrate_crossover(&ns, &t_direct, &t_efficient) {
+            Some(cross) => {
+                println!(
+                    "empirical N̂0 = {cross:.0}  (analytical {n0:.0}, Δ = {:+.0}, paper's GPU rule Δ≈18d = {})",
+                    cross - n0,
+                    18 * d
+                );
+                calibration.push((d, cross));
+                json_points.push(Json::from_pairs(vec![
+                    ("d", Json::Num(d as f64)),
+                    ("crossover", Json::Num(cross)),
+                    ("analytical_n0", Json::Num(n0)),
+                ]));
+            }
+            None => println!("no crossover in sampled range (extend the sweep)"),
+        }
+    }
+
+    if !calibration.is_empty() {
+        let sel = selector::Selector::calibrated(calibration.clone());
+        println!("\ncalibrated selector: crossover(16) = {:.0}", sel.crossover(16));
+        let out = Json::from_pairs(vec![("points", Json::Arr(json_points))]);
+        taylorshift::bench_support::write_json("crossover", &out);
+        println!("wrote bench_out/crossover.json");
+    }
+    Ok(())
+}

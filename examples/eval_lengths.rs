@@ -1,0 +1,96 @@
+//! Fig. 8: accuracy vs sequence length on ListOps.
+//!
+//! Trains one model on the standard length band, then evaluates it on
+//! sequences of controlled lengths inside and beyond the training
+//! distribution — the paper observes gradual decay in-distribution and
+//! a sharp drop out-of-distribution. Also dumps the Fig. 7 QK^T
+//! statistics proxy (per-head temperature values of the trained model).
+//!
+//! Run: `cargo run --release --example eval_lengths -- --steps 200`
+
+use taylorshift::bench_support::Table;
+use taylorshift::data::batch::{collate, Batch};
+use taylorshift::data::listops::ListOpsGen;
+use taylorshift::data::TaskGenerator;
+use taylorshift::runtime::{Registry, Runtime};
+use taylorshift::train::TrainDriver;
+use taylorshift::util::cli::Args;
+use taylorshift::util::rng::Pcg64;
+
+fn batch_of_length(
+    gen_tpl: &ListOpsGen,
+    rng: &mut Pcg64,
+    len: usize,
+    count: usize,
+    pad_to: usize,
+) -> Batch {
+    let gen = ListOpsGen {
+        min_len: len.saturating_sub(len / 5).max(8),
+        max_len: len,
+        ..gen_tpl.clone()
+    };
+    let examples: Vec<_> = (0..count).map(|_| gen.generate(rng)).collect();
+    collate(&examples, pad_to, 0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 200);
+    let seed = args.u64_or("seed", 42);
+
+    let reg = Registry::open(Runtime::cpu()?, args.str_or("artifacts-dir", "artifacts"))?;
+    let mut driver = TrainDriver::new(&reg, "listops_efficient_train_b16")?
+        .with_eval(&reg, "listops_efficient_eval_b32")?;
+    let n_max = driver.seq_len();
+
+    // Training distribution: lengths 16..(N-8) — mirror of train_listops.
+    let train_gen = ListOpsGen {
+        min_len: 16,
+        max_len: n_max - 8,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::new(seed);
+    println!("training {steps} steps on lengths {}..{} ...", 16, n_max - 8);
+    let report = driver.run(&train_gen, &mut rng, steps, |s| {
+        if s.step % 50 == 0 {
+            println!("  step {:>4} loss {:.3} acc {:.3}", s.step, s.loss, s.acc);
+        }
+    })?;
+    println!("trained: final acc {:.3}\n", report.final_acc);
+
+    // Evaluate at controlled lengths (padded to the artifact's N).
+    let mut table = Table::new(&["target len", "in-dist?", "accuracy"]);
+    let lengths = [24usize, 48, 96, 144, 192, 224, 248];
+    let trained_band = 16..=(n_max - 8);
+    for &len in &lengths {
+        if len > n_max {
+            continue;
+        }
+        let mut acc_sum = 0.0f32;
+        let reps = 6;
+        for _ in 0..reps {
+            let b = batch_of_length(&train_gen, &mut rng, len, 32, n_max);
+            let (_, acc) = driver.evaluate_batch(&b.tokens, &b.labels)?;
+            acc_sum += acc;
+        }
+        table.row(&[
+            len.to_string(),
+            if trained_band.contains(&len) { "yes" } else { "OOD" }.to_string(),
+            format!("{:.3}", acc_sum / reps as f32),
+        ]);
+    }
+    println!("=== Fig. 8 (reduced scale): accuracy vs sequence length ===\n");
+    table.print();
+
+    // Fig. 7 proxy: learned per-head temperatures bound |QK^T| post-norm.
+    let names = driver.param_names();
+    let params = driver.params()?;
+    println!("\nlearned attention temperatures τ (bound |QKᵀ| ≤ τ, Fig. 7 support):");
+    for (name, t) in names.iter().zip(&params) {
+        if name.ends_with("/tau") {
+            let vals: Vec<String> = t.data().iter().map(|x| format!("{x:.2}")).collect();
+            println!("  {name}: [{}]", vals.join(", "));
+        }
+    }
+    Ok(())
+}

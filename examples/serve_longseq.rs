@@ -1,0 +1,102 @@
+//! Serving demo: the coordinator under a mixed-length synthetic load.
+//!
+//! Shows the paper's "(and Back)" live: short requests route to the
+//! direct-TaylorShift executables, long ones to efficient, per the
+//! analytical crossover; the dynamic batcher fuses same-bucket
+//! arrivals. Reports latency percentiles, throughput, batch occupancy
+//! and the per-variant split.
+//!
+//! Run: `cargo run --release --example serve_longseq -- --requests 200`
+//! Flags: --requests N --concurrency C --variant auto|direct|efficient
+//!        --max-delay-ms D --seed S
+
+use std::time::{Duration, Instant};
+use taylorshift::coordinator::batcher::BatchPolicy;
+use taylorshift::coordinator::engine::{Engine, EngineConfig, RegistryExecutor};
+use taylorshift::data::listops::ListOpsGen;
+use taylorshift::data::TaskGenerator;
+use taylorshift::util::cli::Args;
+use taylorshift::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let requests = args.usize_or("requests", 200);
+    let concurrency = args.usize_or("concurrency", 16);
+    let seed = args.u64_or("seed", 1);
+    let buckets = vec![128usize, 256, 512, 1024];
+
+    let mut cfg = EngineConfig {
+        buckets: buckets.clone(),
+        head_dim: 16,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_micros(
+                (args.f64_or("max-delay-ms", 2.0) * 1000.0) as u64,
+            ),
+        },
+        queue_limit: 512,
+        forced_variant: None,
+        selector: taylorshift::attention::selector::Selector::analytical(),
+    };
+    if let Some(v) = args.get("variant") {
+        if v != "auto" {
+            cfg.forced_variant = taylorshift::attention::AttentionVariant::parse(v);
+        }
+    }
+    // Use a machine-measured crossover if crossover_sweep produced one.
+    if let Some(cal) = args.get("calibration") {
+        cfg.selector = taylorshift::attention::selector::Selector::from_json_file(
+            std::path::Path::new(cal),
+        )?;
+    }
+
+    let dir = args.str_or("artifacts-dir", "artifacts").to_string();
+    println!("compiling serving executables (one per bucket × variant × batch)...");
+    let t0 = Instant::now();
+    let engine = Engine::start_with(cfg, move || {
+        RegistryExecutor::new(&dir, "serve", &[128, 256, 512, 1024], &[1, 8])
+    })?;
+    println!("engine ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Mixed-length load: bursts of short queries + a long-document tail,
+    // issued from `concurrency` client threads.
+    let gen_short = ListOpsGen { min_len: 20, max_len: 220, ..Default::default() };
+    let gen_long = ListOpsGen { min_len: 300, max_len: 1000, max_args: 8, ..Default::default() };
+    let mut rng = Pcg64::new(seed);
+    let workloads: Vec<Vec<i32>> = (0..requests)
+        .map(|_| {
+            if rng.bernoulli(0.7) {
+                gen_short.generate(&mut rng).tokens
+            } else {
+                gen_long.generate(&mut rng).tokens
+            }
+        })
+        .collect();
+
+    let engine = std::sync::Arc::new(engine);
+    let t0 = Instant::now();
+    let chunk = workloads.len().div_ceil(concurrency);
+    std::thread::scope(|scope| {
+        for part in workloads.chunks(chunk) {
+            let engine = std::sync::Arc::clone(&engine);
+            let part: Vec<Vec<i32>> = part.to_vec();
+            scope.spawn(move || {
+                for tokens in part {
+                    match engine.infer(tokens) {
+                        Ok(_) => {}
+                        Err(e) => eprintln!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== load complete: {requests} requests in {wall:.2}s ({:.1} req/s) ===\n", requests as f64 / wall);
+    println!("{}", engine.metrics().summary());
+    println!(
+        "\nadaptive crossover N0(16)≈{:.0}: buckets ≤256 → direct, ≥512 → efficient",
+        taylorshift::attention::selector::Selector::analytical().crossover(16)
+    );
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Table 3 (reduced scale): accuracy of softmax / direct / efficient
+//! transformers across the three tasks — the paper's core claim that
+//! TaylorShift matches softmax attention's accuracy.
+//!
+//! Paper: 200 epochs on A100s. Here: `--steps` optimization steps per
+//! model on CPU (defaults keep total runtime ~minutes); the comparison
+//! of interest is BETWEEN columns at equal budget, not absolute SOTA.
+//!
+//! Run: `cargo run --release --example train_suite -- --steps 150`
+//! Flags: --steps N --tasks listops,pixel --variants softmax,efficient
+//!        --eval-batches K --seed S
+
+use taylorshift::bench_support::Table;
+use taylorshift::data::task_by_name;
+use taylorshift::runtime::{Registry, Runtime};
+use taylorshift::train::TrainDriver;
+use taylorshift::util::cli::Args;
+use taylorshift::util::json::Json;
+use taylorshift::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 150);
+    let eval_batches = args.usize_or("eval-batches", 8);
+    let seed = args.u64_or("seed", 42);
+    let tasks: Vec<String> = args
+        .get("tasks")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_else(|| vec!["listops".into(), "pixel".into(), "textbytes".into()]);
+    let variants: Vec<String> = args
+        .get("variants")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_else(|| vec!["softmax".into(), "direct".into(), "efficient".into()]);
+
+    let reg = Registry::open(Runtime::cpu()?, args.str_or("artifacts-dir", "artifacts"))?;
+    let mut rows: Vec<(String, Vec<f64>)> = variants
+        .iter()
+        .map(|v| (v.clone(), Vec::new()))
+        .collect();
+    let mut json_rows = Vec::new();
+
+    for task in &tasks {
+        println!("\n== task: {task} ({steps} steps/model) ==");
+        for (vi, variant) in variants.iter().enumerate() {
+            let train_name = format!("{task}_{variant}_train_b16");
+            let eval_name = format!("{task}_{variant}_eval_b32");
+            let mut driver = TrainDriver::new(&reg, &train_name)?.with_eval(&reg, &eval_name)?;
+            let gen = task_by_name(task, driver.seq_len())
+                .ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+            let mut rng = Pcg64::new(seed);
+            let t0 = std::time::Instant::now();
+            let report = driver.run(&gen, &mut rng, steps, |s| {
+                if s.step % 50 == 0 {
+                    println!("  {variant:>9} step {:>4}  loss {:.4}  acc {:.3}", s.step, s.loss, s.acc);
+                }
+            })?;
+            let (eval_loss, eval_acc) = driver.evaluate(&gen, &mut rng, eval_batches)?;
+            println!(
+                "  {variant:>9}: eval acc {:.3} (loss {:.3})  [{:.2} steps/s, {:.0}s]",
+                eval_acc,
+                eval_loss,
+                report.steps_per_s,
+                t0.elapsed().as_secs_f64()
+            );
+            rows[vi].1.push(eval_acc as f64 * 100.0);
+            json_rows.push(Json::from_pairs(vec![
+                ("task", Json::Str(task.clone())),
+                ("variant", Json::Str(variant.clone())),
+                ("eval_acc", Json::Num(eval_acc as f64)),
+                ("eval_loss", Json::Num(eval_loss as f64)),
+                ("steps", Json::Num(steps as f64)),
+                ("steps_per_s", Json::Num(report.steps_per_s)),
+            ]));
+        }
+    }
+
+    println!("\n=== Table 3 (reduced scale): accuracy % ===\n");
+    let mut headers: Vec<&str> = vec!["Model"];
+    headers.extend(tasks.iter().map(|t| t.as_str()));
+    headers.push("Average");
+    let mut table = Table::new(&headers);
+    for (variant, accs) in &rows {
+        let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+        let mut cells = vec![variant.clone()];
+        cells.extend(accs.iter().map(|a| format!("{a:.1}")));
+        cells.push(format!("{avg:.1}"));
+        table.row(&cells);
+    }
+    table.print();
+    taylorshift::bench_support::write_json(
+        "table3_accuracy",
+        &Json::from_pairs(vec![("rows", Json::Arr(json_rows))]),
+    );
+    println!("\nwrote bench_out/table3_accuracy.json");
+    Ok(())
+}

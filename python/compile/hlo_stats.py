@@ -1,0 +1,95 @@
+"""L2 profiling: op-level statistics of lowered HLO modules.
+
+Parses the HLO text artifacts and reports per-module op histograms,
+fusion counts, dot/elementwise ratios and estimated FLOPs — the
+evidence base for the EXPERIMENTS.md §Perf L2 iterations (is anything
+recomputed? did a change increase fusion? how much of the module is
+matmul?).
+
+    python -m compile.hlo_stats --dir ../artifacts --filter serve_
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s]*\s([a-z][\w\-]*)\(")
+SHAPE_RE = re.compile(r"f32\[([\d,]*)\]")
+
+
+def parse_hlo(text: str):
+    """Count ops and estimate dot FLOPs from an HLO text module."""
+    ops = Counter()
+    dot_flops = 0
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        ops[op] += 1
+        if op == "dot":
+            # crude: product of all dims mentioned on the line's result
+            # shape × 2 (the result shape is the first f32[...] token).
+            shapes = SHAPE_RE.findall(line)
+            if shapes and shapes[0]:
+                result = 1
+                for dim in shapes[0].split(","):
+                    result *= int(dim)
+                # contraction dim: approximate with the largest operand dim
+                dims = [int(x) for s in shapes[1:] for x in s.split(",") if x]
+                k = max(dims) if dims else 1
+                dot_flops += 2 * result * k
+    return ops, dot_flops
+
+
+def summarize(name: str, text: str):
+    ops, dot_flops = parse_hlo(text)
+    total = sum(ops.values())
+    fusions = ops.get("fusion", 0)
+    dots = ops.get("dot", 0)
+    top = ", ".join(f"{op}:{n}" for op, n in ops.most_common(6))
+    return {
+        "name": name,
+        "total_ops": total,
+        "fusions": fusions,
+        "dots": dots,
+        "est_dot_gflops": dot_flops / 1e9,
+        "top_ops": top,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="../artifacts")
+    ap.add_argument("--filter", default="", help="substring filter on artifact names")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for fname in sorted(os.listdir(args.dir)):
+        if not fname.endswith(".hlo.txt") or args.filter not in fname:
+            continue
+        with open(os.path.join(args.dir, fname)) as f:
+            rows.append(summarize(fname.removesuffix(".hlo.txt"), f.read()))
+
+    if not rows:
+        print("no matching artifacts")
+        return
+    width = max(len(r["name"]) for r in rows)
+    print(f"{'artifact':<{width}} {'ops':>6} {'fus':>5} {'dots':>5} {'~dotGF':>8}  top ops")
+    for r in rows:
+        print(
+            f"{r['name']:<{width}} {r['total_ops']:>6} {r['fusions']:>5} "
+            f"{r['dots']:>5} {r['est_dot_gflops']:>8.3f}  {r['top_ops']}"
+        )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

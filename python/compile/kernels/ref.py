@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for TaylorShift attention.
+
+These are the correctness ground truth for the Pallas kernels (pytest
+compares kernel outputs against these) and double as the fast lowering
+path used inside the L2 model when the Pallas interpreter would be
+overkill (the math is identical; see DESIGN.md §Hardware-Adaptation).
+
+All functions operate on single-head inputs ``q, k, v: (N, d)``; batch
+and head dimensions are added by ``jax.vmap`` at the call site.
+
+Paper: Nauen et al., *TaylorShift* (2024) — Sections 3.1-3.3,
+Algorithm 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "taylor_softmax",
+    "taylor_direct_plain",
+    "taylor_direct",
+    "taylor_efficient",
+    "taylor_efficient_unnormalized",
+    "softmax_attention",
+    "normalize_rows",
+    "intermediate_sizes",
+]
+
+
+def taylor_softmax(x: jnp.ndarray, order: int = 2) -> jnp.ndarray:
+    """Row-wise Taylor softmax: normalize(sum_{n<=order} x^n / n!).
+
+    For even ``order`` the result is a probability distribution
+    (positive, rows sum to 1) — Section 3.1.
+    """
+    acc = jnp.ones_like(x)
+    term = jnp.ones_like(x)
+    fact = 1.0
+    for n in range(1, order + 1):
+        fact *= n
+        term = term * x
+        acc = acc + term / fact
+    return acc / jnp.sum(jnp.abs(acc), axis=-1, keepdims=True)
+
+
+def normalize_rows(x: jnp.ndarray, scale) -> jnp.ndarray:
+    """l2-normalize the last axis and multiply by ``scale``."""
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return scale * x / jnp.maximum(norm, 1e-12)
+
+
+def taylor_direct_plain(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Direct TaylorShift, Eq. (1): T-SM(QK^T) V — no normalization."""
+    scores = q @ k.T
+    return taylor_softmax(scores, order=2) @ v
+
+
+def taylor_direct(q, k, v, tau=1.0) -> jnp.ndarray:
+    """Direct TaylorShift with the Section-3.3 normalization scheme.
+
+    Interchangeable with :func:`taylor_efficient` — identical output up
+    to float rounding.
+    """
+    n, d = q.shape
+    qn = normalize_rows(q, tau)
+    kn = normalize_rows(k, 1.0)
+    return taylor_direct_plain(qn, kn, v) * jnp.asarray((n / d) ** 0.5, dtype=q.dtype)
+
+
+def taylor_efficient(q, k, v, tau=1.0) -> jnp.ndarray:
+    """Efficient TaylorShift — Algorithm 1 (with normalization).
+
+    ``O(N d^3)`` time, ``O(N d^2)`` memory: the squared Gram term is
+    linearized through the row-wise tensor product
+    ``(QK^T)^(.2) V = Q^box2 ((K^box2)^T V)`` and evaluated
+    right-to-left; nominator and denominator ride together by
+    prepending a ones-column to V (pre-scaled by sqrt(d/N) so the final
+    division also applies the output normalization — footnote 8).
+    """
+    n, d = q.shape
+    alpha = d**0.25
+
+    # Line 5: V <- (1/N) ((sqrt(d/N) 1_N) o V)
+    ones_col = jnp.full((n, 1), (d / n) ** 0.5, dtype=v.dtype)
+    v_aug = jnp.concatenate([ones_col, v], axis=-1) / n
+
+    # Line 6: Q <- alpha tau Q/|Q|, K <- alpha K/|K|
+    qn = normalize_rows(q, alpha * tau)
+    kn = normalize_rows(k, alpha)
+
+    # Line 7: A_mod <- (K box K)^T V    [d^2 x (d+1)]
+    kbox = (kn[:, :, None] * kn[:, None, :]).reshape(n, d * d)
+    a_mod = kbox.T @ v_aug
+
+    # Line 8: Y_hat <- (Q box Q) A_mod
+    qbox = (qn[:, :, None] * qn[:, None, :]).reshape(n, d * d)
+    y_hat = qbox @ a_mod
+
+    # Line 9: Y_hat <- 1/2 Y_hat + alpha^2 Q (K^T V) + alpha^4 sum_i V_i
+    y_hat = (
+        0.5 * y_hat
+        + (alpha**2) * (qn @ (kn.T @ v_aug))
+        + (alpha**4) * jnp.sum(v_aug, axis=0)[None, :]
+    )
+
+    # Lines 10-11: split denominator, Hadamard division.
+    return y_hat[:, 1:] / y_hat[:, :1]
+
+
+def taylor_efficient_unnormalized(q, k, v) -> jnp.ndarray:
+    """The naive linearization without the normalization scheme.
+
+    Mathematically equals :func:`taylor_direct_plain`; numerically its
+    intermediates grow with N per Table 1 and overflow in low precision
+    (Fig. 4 / Appendix B.1). Kept for the Table 4 ablation and the
+    divergence demo.
+    """
+    n, d = q.shape
+    v_aug = jnp.concatenate([jnp.ones((n, 1), dtype=v.dtype), v], axis=-1)
+    kbox = (k[:, :, None] * k[:, None, :]).reshape(n, d * d)
+    a_mod = kbox.T @ v_aug
+    qbox = (q[:, :, None] * q[:, None, :]).reshape(n, d * d)
+    y_hat = 0.5 * (qbox @ a_mod) + q @ (k.T @ v_aug) + jnp.sum(v_aug, axis=0)[None, :]
+    return y_hat[:, 1:] / y_hat[:, :1]
+
+
+def softmax_attention(q, k, v) -> jnp.ndarray:
+    """Standard softmax attention with 1/sqrt(d) scaling (baseline)."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.asarray(d**0.5, dtype=q.dtype)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    weights = jnp.exp(scores)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights @ v
+
+
+def intermediate_sizes(q, k, v):
+    """Mean norms of the efficient pipeline's intermediates
+    (unnormalized, unit-sphere inputs) — the Table 1 / Fig. 5 study.
+
+    Returns a dict with mean row norms and full Frobenius norms; the
+    scaling study (``compile/scaling_study.py``) fits the paper's
+    candidate laws against these.
+    """
+    n, d = q.shape
+    v_aug = jnp.concatenate([jnp.ones((n, 1), dtype=v.dtype), v], axis=-1)
+    kbox = (k[:, :, None] * k[:, None, :]).reshape(n, d * d)
+    a_mod = kbox.T @ v_aug
+    qbox = (q[:, :, None] * q[:, None, :]).reshape(n, d * d)
+    y_sq = qbox @ a_mod
+    y_lin = q @ (k.T @ v_aug)
+    y_hat = 0.5 * y_sq + y_lin + jnp.sum(v_aug, axis=0)[None, :]
+    y_denom = y_hat[:, :1]
+    y = y_hat[:, 1:] / y_denom
+
+    def row_norm(x):
+        return float(jnp.mean(jnp.linalg.norm(x, axis=-1)))
+
+    def fro(x):
+        return float(jnp.linalg.norm(x))
+
+    return {
+        "a_mod": {"row": row_norm(a_mod.T), "fro": fro(a_mod)},
+        "squared_v": {"row": row_norm(y_sq[:, 1:]), "fro": fro(y_sq[:, 1:])},
+        "linear_v": {"row": row_norm(y_lin[:, 1:]), "fro": fro(y_lin[:, 1:])},
+        "y_denom": {"row": float(jnp.mean(jnp.abs(y_denom))), "fro": fro(y_denom)},
+        "y": {"row": row_norm(y), "fro": fro(y)},
+    }

@@ -1,0 +1,68 @@
+"""Softmax attention baseline as a Pallas kernel (flash-style).
+
+Grid over row-blocks with an *online-softmax* column loop: running
+row-max and normalizer are updated block by block, so no N x N matrix
+is materialized. This is the IO-aware schedule of FlashAttention,
+included so the baseline is tiled at the same level of care as the
+TaylorShift kernels (paper App. C.3 compares algorithms at equal
+implementation level — we keep that parity).
+
+``interpret=True`` — see ``tsa_efficient.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["softmax_attention_pallas"]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, y_ref, *, block_k: int, scale: float):
+    bn, d = q_ref.shape
+    n = k_ref.shape[0]
+    q = q_ref[...] * scale
+    nkb = n // block_k
+
+    def body(j, carry):
+        acc, m, l = carry  # acc: (bn, d), m/l: (bn, 1)
+        k_blk = jax.lax.dynamic_slice(k_ref[...], (j * block_k, 0), (block_k, d))
+        v_blk = jax.lax.dynamic_slice(v_ref[...], (j * block_k, 0), (block_k, d))
+        s = q @ k_blk.T  # (bn, bk)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + p @ v_blk
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((bn, d), dtype=q.dtype)
+    m0 = jnp.full((bn, 1), -jnp.inf, dtype=q.dtype)
+    l0 = jnp.zeros((bn, 1), dtype=q.dtype)
+    acc, _, l = jax.lax.fori_loop(0, nkb, body, (acc0, m0, l0))
+    y_ref[...] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def softmax_attention_pallas(q, k, v, *, block_n: int = 128, block_k: int = 128):
+    """softmax(QK^T/sqrt(d)) V, flash-tiled. N must divide both blocks."""
+    n, d = q.shape
+    assert n % block_n == 0 and n % block_k == 0
+    nb = n // block_n
+    scale = float(d**-0.5)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, scale=scale),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,113 @@
+"""Efficient-TaylorShift as a Pallas kernel (Algorithm 1).
+
+TPU-shaped formulation (see DESIGN.md §Hardware-Adaptation): instead of
+porting a CUDA threadblock layout, the kernel expresses the paper's
+insight — stream the sequence once, accumulating a tiny
+``(d^2+d+1) x (d+1)`` moment matrix in VMEM — with two ``pallas_call``
+grids over N-blocks:
+
+* **moments kernel** — for each K/V block, form the feature map
+  ``phi(k) = [k (x) k, k, 1]`` (the degree-2 polynomial features of the
+  Taylor expansion) and accumulate ``A_full += phi(K_blk)^T V_blk``.
+  ``A_full`` lives in the output block, mapped to the same block for
+  every grid step (standard Pallas accumulator pattern); this is the
+  Flash-style partial-``A_mod`` schedule the paper's App. D.2 suggests.
+* **apply kernel** — for each Q block, ``Y_hat_blk = phi_c(q) @ A_full``
+  where ``phi_c(q) = [1/2 q (x) q, a^2 q, a^4 1]`` carries the
+  rescaled Taylor coefficients (footnote 7), then divide by the
+  denominator column.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls; on a real TPU the same BlockSpecs compile natively
+(block-size VMEM analysis in ``analysis::roofline``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["taylor_efficient_pallas"]
+
+
+def _moments_kernel(k_ref, v_ref, a_ref):
+    """Accumulate A_full += [K (x) K ; K ; 1]^T @ V over N-blocks."""
+    i = pl.program_id(0)
+    bn, d = k_ref.shape
+    k = k_ref[...]
+    v = v_ref[...]
+    kbox = (k[:, :, None] * k[:, None, :]).reshape(bn, d * d)
+    ones = jnp.ones((bn, 1), dtype=k.dtype)
+    phi = jnp.concatenate([kbox, k, ones], axis=-1)  # (bn, d^2+d+1)
+    update = phi.T @ v  # (d^2+d+1, d+1)
+
+    @pl.when(i == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    a_ref[...] += update
+
+
+def _apply_kernel(q_ref, a_ref, y_ref, *, alpha: float):
+    """Y_hat_blk = [1/2 Q (x) Q ; a^2 Q ; a^4 1] @ A_full, then divide."""
+    bn, d = q_ref.shape
+    q = q_ref[...]
+    qbox = (q[:, :, None] * q[:, None, :]).reshape(bn, d * d)
+    ones = jnp.ones((bn, 1), dtype=q.dtype)
+    phi = jnp.concatenate(
+        [0.5 * qbox, (alpha**2) * q, (alpha**4) * ones], axis=-1
+    )
+    y_hat = phi @ a_ref[...]  # (bn, d+1)
+    y_ref[...] = y_hat[:, 1:] / y_hat[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def taylor_efficient_pallas(q, k, v, tau=1.0, *, block_n: int = 128):
+    """Efficient-TaylorShift with normalization, Pallas-tiled over N.
+
+    Matches :func:`ref.taylor_efficient` to float tolerance. ``N`` must
+    be divisible by ``block_n`` (callers pad to the bucket grid; the
+    coordinator's batcher guarantees this on the serving path).
+    """
+    n, d = q.shape
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    nb = n // block_n
+    alpha = float(d**0.25)
+
+    # Normalization prologue (cheap, fused by XLA) — Lines 4-6.
+    ones_col = jnp.full((n, 1), (d / n) ** 0.5, dtype=v.dtype)
+    v_aug = jnp.concatenate([ones_col, v], axis=-1) / n
+    qn = ref.normalize_rows(q, alpha * tau)
+    kn = ref.normalize_rows(k, alpha)
+
+    dd = d * d + d + 1
+    a_full = pl.pallas_call(
+        _moments_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, d + 1), lambda i: (i, 0)),
+        ],
+        # Every grid step maps to the same output block => accumulator.
+        out_specs=pl.BlockSpec((dd, d + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((dd, d + 1), q.dtype),
+        interpret=True,
+    )(kn, v_aug)
+
+    y = pl.pallas_call(
+        functools.partial(_apply_kernel, alpha=alpha),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((dd, d + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=True,
+    )(qn, a_full)
+    return y

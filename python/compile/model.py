@@ -1,0 +1,265 @@
+"""L2: the TaylorShift transformer encoder in JAX.
+
+A ViT/LRA-style encoder for sequence classification, mirroring the
+paper's experimental models (Appendix C): token embedding (linear table
+or the App. D.5 3-layer CNN), cosine or learned positional encoding,
+``depth`` pre-norm blocks of multi-head self-attention + MLP, mean
+pooling, and a linear classifier head.
+
+The attention mechanism is switchable per config — ``softmax``,
+``direct`` or ``efficient`` TaylorShift (interchangeable, Section 3) —
+including the Table 4 normalization-ablation stages and an optional
+Pallas-kernel execution path (``use_pallas``) that routes the per-head
+computation through ``kernels/tsa_*.py`` so the paper's L1 kernels lower
+into the same HLO.
+
+Everything here runs ONCE at build time (``make artifacts``); the rust
+coordinator only ever sees the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.softmax_attn import softmax_attention_pallas
+from .kernels.tsa_direct import taylor_direct_pallas
+from .kernels.tsa_efficient import taylor_efficient_pallas
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of one encoder (cf. paper Table 6)."""
+
+    name: str
+    vocab_size: int
+    num_classes: int
+    seq_len: int
+    depth: int
+    d_embed: int
+    heads: int
+    mlp_ratio: float = 2.0
+    variant: str = "efficient"  # softmax | direct | efficient
+    norm_stage: str = "full"  # plain | input | full   (Table 4)
+    embed: str = "linear"  # linear | conv           (Table 8)
+    pos: str = "cosine"  # cosine | learned
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        assert self.d_embed % self.heads == 0, "heads must divide d_embed"
+        assert self.variant in ("softmax", "direct", "efficient")
+        assert self.norm_stage in ("plain", "input", "full")
+        assert self.embed in ("linear", "conv")
+        assert self.pos in ("cosine", "learned")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_embed // self.heads
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = math.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Initialize the parameter pytree (plain nested dicts)."""
+    keys = iter(jax.random.split(key, 16 + 8 * cfg.depth))
+    e = cfg.d_embed
+    params: Params = {
+        "tok_embed": jax.random.normal(next(keys), (cfg.vocab_size, e), jnp.float32)
+        * 0.02
+    }
+    if cfg.embed == "conv":
+        # App. D.5: 3-layer 1-D CNN over the embedded sequence (kernel 3).
+        for i in range(3):
+            params[f"conv{i}_w"] = (
+                jax.random.normal(next(keys), (3, e, e), jnp.float32)
+                * math.sqrt(2.0 / (3 * e))
+            )
+            params[f"conv{i}_b"] = jnp.zeros((e,), jnp.float32)
+    if cfg.pos == "learned":
+        params["pos_embed"] = (
+            jax.random.normal(next(keys), (cfg.seq_len, e), jnp.float32) * 0.02
+        )
+    for layer in range(cfg.depth):
+        d = cfg.head_dim
+        block = {
+            "ln1_g": jnp.ones((e,), jnp.float32),
+            "ln1_b": jnp.zeros((e,), jnp.float32),
+            "wqkv": _dense_init(next(keys), e, 3 * e),
+            "bqkv": jnp.zeros((3 * e,), jnp.float32),
+            # Per-head attention temperature tau (Section 3.3); init at
+            # sqrt(d) so initial score range matches softmax attention's
+            # post-1/sqrt(d) logits.
+            "tau": jnp.full((cfg.heads,), math.sqrt(d), jnp.float32),
+            "wo": _dense_init(next(keys), e, e),
+            "bo": jnp.zeros((e,), jnp.float32),
+            "ln2_g": jnp.ones((e,), jnp.float32),
+            "ln2_b": jnp.zeros((e,), jnp.float32),
+            "w1": _dense_init(next(keys), e, int(e * cfg.mlp_ratio)),
+            "b1": jnp.zeros((int(e * cfg.mlp_ratio),), jnp.float32),
+            "w2": _dense_init(next(keys), int(e * cfg.mlp_ratio), e),
+            "b2": jnp.zeros((e,), jnp.float32),
+        }
+        params[f"block{layer}"] = block
+    params["ln_f_g"] = jnp.ones((e,), jnp.float32)
+    params["ln_f_b"] = jnp.zeros((e,), jnp.float32)
+    params["head_w"] = _dense_init(next(keys), e, cfg.num_classes)
+    params["head_b"] = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return params
+
+
+def num_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _cosine_pos(seq_len: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len)[:, None].astype(jnp.float32)
+    idx = jnp.arange(dim)[None, :]
+    angle = pos / jnp.power(10000.0, (2 * (idx // 2)) / dim)
+    return jnp.where(idx % 2 == 0, jnp.sin(angle), jnp.cos(angle))
+
+
+def _block_n(n: int) -> int:
+    """Largest power-of-two Pallas block <= 128 that divides n."""
+    bn = 128
+    while bn > 1 and n % bn != 0:
+        bn //= 2
+    return bn
+
+
+def _attention_head(cfg: ModelConfig, q, k, v, tau):
+    """Dispatch one head (N, d) through the configured mechanism."""
+    n, d = q.shape
+    if cfg.variant == "softmax":
+        if cfg.use_pallas:
+            return softmax_attention_pallas(
+                q, k, v, block_n=_block_n(n), block_k=_block_n(n)
+            )
+        return ref.softmax_attention(q, k, v)
+    if cfg.variant == "direct":
+        if cfg.norm_stage == "plain":
+            return ref.taylor_direct_plain(q, k, v)
+        if cfg.norm_stage == "input":
+            return ref.taylor_direct_plain(
+                ref.normalize_rows(q, tau), ref.normalize_rows(k, 1.0), v
+            )
+        if cfg.use_pallas:
+            return taylor_direct_pallas(q, k, v, tau, block_n=_block_n(n))
+        return ref.taylor_direct(q, k, v, tau)
+    # efficient
+    if cfg.norm_stage == "plain":
+        return ref.taylor_efficient_unnormalized(q, k, v)
+    if cfg.norm_stage == "input":
+        # Input normalization without the output-size rescale: same as
+        # Algorithm 1 but the output keeps T-SM scale (divide away the
+        # sqrt(N/d) the denominator pre-scale would introduce).
+        return ref.taylor_efficient(q, k, v, tau) * (d / n) ** 0.5
+    if cfg.use_pallas:
+        return taylor_efficient_pallas(q, k, v, tau, block_n=_block_n(n))
+    return ref.taylor_efficient(q, k, v, tau)
+
+
+def _mhsa(cfg: ModelConfig, block: Params, x):
+    """Multi-head self-attention over x: (N, E) -> (N, E)."""
+    n, e = x.shape
+    h, d = cfg.heads, cfg.head_dim
+    qkv = x @ block["wqkv"] + block["bqkv"]  # (N, 3E)
+    qkv = qkv.reshape(n, 3, h, d).transpose(1, 2, 0, 3)  # (3, h, N, d)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    run = lambda qh, kh, vh, tau: _attention_head(cfg, qh, kh, vh, tau)
+    y = jax.vmap(run)(q, k, v, block["tau"])  # (h, N, d)
+    y = y.transpose(1, 0, 2).reshape(n, e)
+    return y @ block["wo"] + block["bo"]
+
+
+def _conv1d(x, w, b):
+    """Same-padded 1-D conv over (N, E) with kernel (3, E, E)."""
+    out = jax.lax.conv_general_dilated(
+        x[None, :, :],
+        w,
+        window_strides=(1,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )[0]
+    return out + b
+
+
+def forward_single(cfg: ModelConfig, params: Params, tokens) -> jnp.ndarray:
+    """Logits for one sequence of token ids (N,) -> (num_classes,)."""
+    x = params["tok_embed"][tokens]  # (N, E)
+    if cfg.embed == "conv":
+        for i in range(3):
+            x = jax.nn.gelu(_conv1d(x, params[f"conv{i}_w"], params[f"conv{i}_b"]))
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"]
+    else:
+        x = x + _cosine_pos(cfg.seq_len, cfg.d_embed)
+    for layer in range(cfg.depth):
+        block = params[f"block{layer}"]
+        x = x + _mhsa(cfg, block, _layer_norm(x, block["ln1_g"], block["ln1_b"]))
+        hmid = jax.nn.gelu(
+            _layer_norm(x, block["ln2_g"], block["ln2_b"]) @ block["w1"] + block["b1"]
+        )
+        x = x + hmid @ block["w2"] + block["b2"]
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    pooled = jnp.mean(x, axis=0)
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+def forward(cfg: ModelConfig, params: Params, tokens) -> jnp.ndarray:
+    """Batched logits: tokens (B, N) int32 -> (B, num_classes)."""
+    return jax.vmap(lambda t: forward_single(cfg, params, t))(tokens)
+
+
+def qk_scores_single(cfg: ModelConfig, params: Params, tokens, layer: int = 0):
+    """The QK^T score matrix of one layer/head for the Fig. 7 study
+    (distribution of attention logits in a trained model)."""
+    x = params["tok_embed"][tokens]
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"]
+    else:
+        x = x + _cosine_pos(cfg.seq_len, cfg.d_embed)
+    for li in range(layer):
+        block = params[f"block{li}"]
+        x = x + _mhsa(cfg, block, _layer_norm(x, block["ln1_g"], block["ln1_b"]))
+        hmid = jax.nn.gelu(
+            _layer_norm(x, block["ln2_g"], block["ln2_b"]) @ block["w1"] + block["b1"]
+        )
+        x = x + hmid @ block["w2"] + block["b2"]
+    block = params[f"block{layer}"]
+    xn = _layer_norm(x, block["ln1_g"], block["ln1_b"])
+    n, e = xn.shape
+    h, d = cfg.heads, cfg.head_dim
+    qkv = (xn @ block["wqkv"] + block["bqkv"]).reshape(n, 3, h, d).transpose(1, 2, 0, 3)
+    q, k = qkv[0], qkv[1]
+    qn = ref.normalize_rows(q, block["tau"][:, None, None])
+    kn = ref.normalize_rows(k, 1.0)
+    return jnp.einsum("hnd,hmd->hnm", qn, kn)

@@ -1,0 +1,92 @@
+"""Fig. 5 / Fig. 6 / Table 1 scaling study (python side).
+
+Measures the mean magnitudes of efficient-TaylorShift's intermediate
+expressions with Q, K, V rows uniform on the unit sphere (the paper's
+sampling regime, 16384-sample batches in the paper; sample count here
+is configurable) and fits log-log slopes against the paper's laws.
+
+Run once at build time if you want the JSON next to the artifacts:
+
+    python -m compile.scaling_study --out ../bench_out/fig5_python.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def unit_rows(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def measure(n: int, d: int, reps: int, seed: int = 0):
+    out = {"a_mod": 0.0, "y_denom": 0.0, "y": 0.0, "squared_v": 0.0, "linear_v": 0.0}
+    for rep in range(reps):
+        key = jax.random.PRNGKey(seed * 1000 + rep)
+        kq, kk, kv = jax.random.split(key, 3)
+        sizes = ref.intermediate_sizes(
+            unit_rows(kq, n, d), unit_rows(kk, n, d), unit_rows(kv, n, d)
+        )
+        out["a_mod"] += sizes["a_mod"]["fro"]
+        out["y_denom"] += sizes["y_denom"]["row"]
+        out["y"] += sizes["y"]["row"]
+        out["squared_v"] += sizes["squared_v"]["fro"]
+        out["linear_v"] += sizes["linear_v"]["fro"]
+    return {k: v / reps for k, v in out.items()}
+
+
+def loglog_slope(ns, ys):
+    x = np.log(np.asarray(ns, dtype=np.float64))
+    y = np.log(np.asarray(ys, dtype=np.float64))
+    return float(np.polyfit(x, y, 1)[0])
+
+
+def run_study(d: int = 16, ns=None, reps: int = 4, seed: int = 0):
+    ns = ns or [64, 128, 256, 512, 1024, 2048, 4096]
+    rows = []
+    for n in ns:
+        m = measure(n, d, reps, seed)
+        m["n"] = n
+        rows.append(m)
+    slopes = {
+        key: loglog_slope(ns, [r[key] for r in rows])
+        for key in ("a_mod", "y_denom", "y")
+    }
+    # Paper Table 1 exponents in N: A_mod ~ N, Y_denom ~ N, Y ~ N^{-1/2}.
+    expected = {"a_mod": 1.0, "y_denom": 1.0, "y": -0.5}
+    return {"d": d, "rows": rows, "slopes": slopes, "expected": expected}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=4)
+    args = ap.parse_args()
+    result = run_study(d=args.d, reps=args.reps)
+    print(f"d = {result['d']}")
+    print(f"{'N':>6} {'|A_mod|':>12} {'|Y_denom|':>12} {'|Y|':>10}")
+    for r in result["rows"]:
+        print(f"{r['n']:>6} {r['a_mod']:>12.2f} {r['y_denom']:>12.2f} {r['y']:>10.4f}")
+    print("\nlog-log slopes vs paper Table 1:")
+    for k, s in result["slopes"].items():
+        print(f"  {k:8s}: {s:+.3f}  (paper {result['expected'][k]:+.1f})")
+    if args.out:
+        import os
+
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Training step: cross-entropy loss + LAMB/AdamW in plain jnp.
+
+The paper trains with *fused LAMB* (Table 6); optax is unavailable in
+this environment, so both LAMB (You et al., 2020) and AdamW are
+implemented directly on the parameter pytree. The entire train step —
+forward, backward, optimizer update and the warmup+cosine lr schedule —
+is one jit-able function that ``aot.py`` lowers to a single HLO module;
+the rust train driver just feeds batches and round-trips the state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "lamb"  # lamb | adamw
+    lr: float = 1e-3
+    warmup_steps: int = 50
+    total_steps: int = 1000
+    weight_decay: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-6
+    # LAMB trust-ratio clamp.
+    trust_min: float = 0.0
+    trust_max: float = 10.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def lr_at(tc: TrainConfig, step) -> jnp.ndarray:
+    """Warmup + cosine decay (paper Table 6 schedule), as a jnp expr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - tc.warmup_steps) / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return tc.lr * warm * cos
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    """(m, v) moment trees, zero-initialized."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def loss_and_acc(cfg, params, tokens, labels):
+    """Mean CE loss + accuracy over a batch."""
+    logits = model_lib.forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def _is_no_decay(path: str) -> bool:
+    """Biases, layernorm gains and tau get no weight decay / trust ratio
+    exemption (standard LAMB practice)."""
+    leaf = path.split("/")[-1]
+    return (
+        leaf.startswith("b")
+        or leaf.startswith("ln")
+        or leaf in ("tau", "pos_embed", "head_b")
+        or leaf.endswith("_b")
+        or leaf.endswith("_g")
+    )
+
+
+def _tree_paths(tree) -> list:
+    paths = []
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for key in sorted(node):
+                walk(f"{prefix}/{key}" if prefix else key, node[key])
+        else:
+            paths.append(prefix)
+
+    walk("", tree)
+    return paths
+
+
+def _update_leaf(tc: TrainConfig, path, p, g, m, v, lr, t):
+    """One optimizer step on a single leaf; returns (p', m', v')."""
+    m_new = tc.beta1 * m + (1.0 - tc.beta1) * g
+    v_new = tc.beta2 * v + (1.0 - tc.beta2) * g * g
+    m_hat = m_new / (1.0 - tc.beta1**t)
+    v_hat = v_new / (1.0 - tc.beta2**t)
+    update = m_hat / (jnp.sqrt(v_hat) + tc.eps)
+    if not _is_no_decay(path):
+        update = update + tc.weight_decay * p
+    if tc.optimizer == "lamb" and not _is_no_decay(path):
+        w_norm = jnp.linalg.norm(p)
+        u_norm = jnp.linalg.norm(update)
+        trust = jnp.where(
+            (w_norm > 0) & (u_norm > 0),
+            jnp.clip(w_norm / u_norm, tc.trust_min, tc.trust_max),
+            1.0,
+        )
+        update = trust * update
+    return p - lr * update, m_new, v_new
+
+
+def train_step(cfg, tc: TrainConfig, params, m, v, step, tokens, labels):
+    """One optimization step. Pure function of its inputs — the unit the
+    AOT pipeline lowers. Returns (params', m', v', loss, acc)."""
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: loss_and_acc(cfg, p, tokens, labels), has_aux=True
+    )(params)
+    lr = lr_at(tc, step)
+    t = step.astype(jnp.float32) + 1.0
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(m)[0]
+    flat_v = jax.tree_util.tree_flatten(v)[0]
+    paths = _tree_paths(params)
+    assert len(paths) == len(flat_p), "path walk must match tree_flatten order"
+
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, mm, vv in zip(paths, flat_p, flat_g, flat_m, flat_v):
+        p2, m2, v2 = _update_leaf(tc, path, p, g, mm, vv, lr, t)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    unf = jax.tree_util.tree_unflatten
+    return unf(treedef, new_p), unf(treedef, new_m), unf(treedef, new_v), loss, acc
+
+
+def eval_step(cfg, params, tokens, labels):
+    """Loss + accuracy without updates (lowered for the eval path)."""
+    return loss_and_acc(cfg, params, tokens, labels)

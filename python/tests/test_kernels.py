@@ -1,0 +1,238 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The CORE correctness signal of the compile path — every kernel must
+match ``ref.py`` to float tolerance across a hypothesis-driven sweep of
+shapes and parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.softmax_attn import softmax_attention_pallas
+from compile.kernels.tsa_direct import taylor_direct_pallas
+from compile.kernels.tsa_efficient import taylor_efficient_pallas
+
+
+def qkv(n, d, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    return (
+        jax.random.normal(kq, (n, d), dtype),
+        jax.random.normal(kk, (n, d), dtype),
+        jax.random.normal(kv, (n, d), dtype),
+    )
+
+
+def assert_close(a, b, atol=1e-5, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency (Section 3.2: both forms are the same function)
+# ---------------------------------------------------------------------------
+
+
+class TestOracle:
+    def test_taylor_softmax_is_distribution(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (7, 11))
+        p = ref.taylor_softmax(x, order=2)
+        assert np.all(np.asarray(p) >= 0)
+        assert_close(jnp.sum(p, axis=-1), jnp.ones(7))
+
+    def test_taylor_softmax_order2_values(self):
+        # hand-computed: x = [0, 1] -> [1, 2.5] -> normalize
+        x = jnp.array([[0.0, 1.0]])
+        p = ref.taylor_softmax(x, order=2)
+        assert_close(p, jnp.array([[1.0 / 3.5, 2.5 / 3.5]]))
+
+    @pytest.mark.parametrize("n,d", [(8, 4), (33, 8), (128, 16), (65, 32)])
+    def test_efficient_equals_direct(self, n, d):
+        q, k, v = qkv(n, d, seed=n + d)
+        assert_close(
+            ref.taylor_efficient(q, k, v, 1.3),
+            ref.taylor_direct(q, k, v, 1.3),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    @pytest.mark.parametrize("n,d", [(16, 4), (64, 8)])
+    def test_unnormalized_efficient_equals_plain_direct(self, n, d):
+        q, k, v = qkv(n, d, seed=3)
+        q, k = 0.3 * q, 0.3 * k
+        assert_close(
+            ref.taylor_efficient_unnormalized(q, k, v),
+            ref.taylor_direct_plain(q, k, v),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    def test_constant_values_pass_through(self):
+        # T-SM rows are a distribution => constant V is preserved.
+        q, k, _ = qkv(32, 8, seed=5)
+        v = jnp.full((32, 8), 2.5)
+        for fn in (ref.taylor_direct_plain, lambda q, k, v: ref.taylor_efficient_unnormalized(q, k, v)):
+            assert_close(fn(q, k, v), v, atol=1e-4)
+
+    def test_normalized_invariant_to_input_scale(self):
+        q, k, v = qkv(24, 8, seed=6)
+        y1 = ref.taylor_efficient(q, k, v, 2.0)
+        y2 = ref.taylor_efficient(100.0 * q, 0.01 * k, v, 2.0)
+        assert_close(y1, y2, atol=1e-4, rtol=1e-3)
+
+    def test_taylor_tracks_softmax_for_small_logits(self):
+        # Approximation view ([Keles et al. 2023] error bounds): for
+        # small scores the 2nd-order Taylor softmax ~ softmax.
+        q, k, v = qkv(16, 8, seed=7)
+        qs, ks = 0.1 * q, 0.1 * k
+        soft = ref.softmax_attention(qs * (8**0.5), ks, v)  # undo 1/sqrt(d)
+        taylor = ref.taylor_direct_plain(qs, ks, v)
+        np.testing.assert_allclose(np.asarray(soft), np.asarray(taylor), atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestPallasKernels:
+    @pytest.mark.parametrize("n,d,bn", [(128, 8, 64), (256, 16, 128), (128, 32, 32)])
+    def test_efficient_kernel(self, n, d, bn):
+        q, k, v = qkv(n, d, seed=n)
+        assert_close(
+            taylor_efficient_pallas(q, k, v, 1.1, block_n=bn),
+            ref.taylor_efficient(q, k, v, 1.1),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    @pytest.mark.parametrize("n,d,bn", [(128, 8, 64), (256, 16, 128), (128, 32, 32)])
+    def test_direct_kernel(self, n, d, bn):
+        q, k, v = qkv(n, d, seed=n + 1)
+        assert_close(
+            taylor_direct_pallas(q, k, v, 1.1, block_n=bn),
+            ref.taylor_direct(q, k, v, 1.1),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    @pytest.mark.parametrize("n,d,bn,bk", [(128, 8, 64, 64), (256, 16, 128, 64)])
+    def test_softmax_kernel(self, n, d, bn, bk):
+        q, k, v = qkv(n, d, seed=n + 2)
+        assert_close(
+            softmax_attention_pallas(q, k, v, block_n=bn, block_k=bk),
+            ref.softmax_attention(q, k, v),
+            atol=1e-5, rtol=1e-4,
+        )
+
+    def test_kernels_cross_agree(self):
+        # direct and efficient kernels agree with each other directly.
+        q, k, v = qkv(256, 16, seed=11)
+        assert_close(
+            taylor_efficient_pallas(q, k, v, 0.7),
+            taylor_direct_pallas(q, k, v, 0.7),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    def test_block_size_invariance(self):
+        q, k, v = qkv(256, 8, seed=12)
+        y64 = taylor_efficient_pallas(q, k, v, 1.0, block_n=64)
+        y256 = taylor_efficient_pallas(q, k, v, 1.0, block_n=256)
+        assert_close(y64, y256, atol=1e-5, rtol=1e-4)
+
+    def test_rejects_indivisible_n(self):
+        q, k, v = qkv(100, 8, seed=13)
+        with pytest.raises(AssertionError):
+            taylor_efficient_pallas(q, k, v, 1.0, block_n=64)
+
+    # Hypothesis sweep: random shapes, temperatures, magnitudes.
+    @settings(max_examples=12, deadline=None)
+    @given(
+        nb=st.integers(1, 4),
+        bn=st.sampled_from([32, 64]),
+        d=st.sampled_from([4, 8, 16]),
+        tau=st.floats(0.25, 4.0),
+        scale=st.floats(0.1, 10.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_efficient_kernel_hypothesis(self, nb, bn, d, tau, scale, seed):
+        n = nb * bn
+        q, k, v = qkv(n, d, seed=seed)
+        y_kernel = taylor_efficient_pallas(scale * q, k, v, tau, block_n=bn)
+        y_ref = ref.taylor_efficient(scale * q, k, v, tau)
+        assert_close(y_kernel, y_ref, atol=1e-4, rtol=1e-3)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        nb=st.integers(1, 3),
+        d=st.sampled_from([4, 8]),
+        tau=st.floats(0.25, 4.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_direct_kernel_hypothesis(self, nb, d, tau, seed):
+        n = nb * 64
+        q, k, v = qkv(n, d, seed=seed)
+        assert_close(
+            taylor_direct_pallas(q, k, v, tau, block_n=64),
+            ref.taylor_direct(q, k, v, tau),
+            atol=1e-4, rtol=1e-3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Numerical behavior (Section 3.3, Table 1, Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+class TestNumerics:
+    def test_unnormalized_intermediates_grow_with_n(self):
+        d = 8
+        sizes = []
+        for n in (128, 512):
+            key = jax.random.PRNGKey(n)
+            kq, kk, kv = jax.random.split(key, 3)
+            mk = lambda k_: ref.normalize_rows(jax.random.normal(k_, (n, d)), 1.0)
+            s = ref.intermediate_sizes(mk(kq), mk(kk), mk(kv))
+            sizes.append(s)
+        # A_mod and Y_denom grow ~linearly in N (Table 1).
+        assert sizes[1]["a_mod"]["fro"] > 3.0 * sizes[0]["a_mod"]["fro"]
+        assert sizes[1]["y_denom"]["row"] > 3.0 * sizes[0]["y_denom"]["row"]
+        # final (normalized) output shrinks ~ sqrt(d/N)
+        assert sizes[1]["y"]["row"] < sizes[0]["y"]["row"]
+
+    def test_table1_a_mod_frobenius_law(self):
+        # Paper Table 1: |A_mod| ~ (N+1)/sqrt(d) — Frobenius norm with
+        # the un-scaled denominator column dominating.
+        n, d = 1024, 16
+        key = jax.random.PRNGKey(1)
+        kq, kk, kv = jax.random.split(key, 3)
+        mk = lambda k_: ref.normalize_rows(jax.random.normal(k_, (n, d)), 1.0)
+        s = ref.intermediate_sizes(mk(kq), mk(kk), mk(kv))
+        pred = (n + 1) / d**0.5
+        assert 0.5 < s["a_mod"]["fro"] / pred < 2.0
+
+    def test_unnormalized_overflows_in_f16(self):
+        # Fig. 4 / App. B.1: the plain linearization overflows in low
+        # precision for long sequences; the normalized version does not.
+        n, d = 4096, 16
+        key = jax.random.PRNGKey(2)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (n, d), jnp.float16) * 4
+        k = jax.random.normal(kk, (n, d), jnp.float16) * 4
+        v = jax.random.normal(kv, (n, d), jnp.float16) * 4
+        y_plain = ref.taylor_efficient_unnormalized(q, k, v)
+        assert not bool(jnp.all(jnp.isfinite(y_plain))), "expected overflow"
+        y_norm = ref.taylor_efficient(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), 1.0
+        ).astype(jnp.float16)
+        assert bool(jnp.all(jnp.isfinite(y_norm)))
+
+    def test_normalized_output_size_consistent_across_n(self):
+        # Section 3.3 goal: output mean size independent of N.
+        d = 16
+        norms = []
+        for n in (128, 1024):
+            q, k, v = qkv(n, d, seed=n)
+            y = ref.taylor_efficient(q, k, v, 1.0)
+            norms.append(float(jnp.mean(jnp.linalg.norm(y, axis=-1))))
+        ratio = norms[1] / norms[0]
+        assert 0.5 < ratio < 2.0, norms

@@ -1,0 +1,191 @@
+"""L2 tests: encoder shapes, variant interchangeability, gradients,
+optimizer behavior, and the train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.aot import model_cfg, DEFAULT_TC
+from compile.model import ModelConfig
+
+
+def tiny_cfg(**over):
+    base = dict(
+        name="tiny", vocab_size=12, num_classes=3, seq_len=32, depth=2,
+        d_embed=16, heads=2, mlp_ratio=2.0, variant="efficient",
+    )
+    base.update(over)
+    return ModelConfig(**base)
+
+
+def data(cfg, batch=4, seed=0):
+    kt, kl = jax.random.split(jax.random.PRNGKey(seed))
+    tokens = jax.random.randint(kt, (batch, cfg.seq_len), 0, cfg.vocab_size)
+    labels = jax.random.randint(kl, (batch,), 0, cfg.num_classes)
+    return tokens, labels
+
+
+class TestForward:
+    @pytest.mark.parametrize("variant", ["softmax", "direct", "efficient"])
+    def test_shapes(self, variant):
+        cfg = tiny_cfg(variant=variant)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        tokens, _ = data(cfg)
+        logits = M.forward(cfg, params, tokens)
+        assert logits.shape == (4, cfg.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_direct_equals_efficient_model_level(self):
+        # The whole encoder output is identical under the two variants
+        # (same parameters): the paper's interchangeability claim at
+        # model scale.
+        cfg_d = tiny_cfg(variant="direct")
+        cfg_e = tiny_cfg(variant="efficient")
+        params = M.init_params(jax.random.PRNGKey(1), cfg_d)
+        tokens, _ = data(cfg_d)
+        ld = M.forward(cfg_d, params, tokens)
+        le = M.forward(cfg_e, params, tokens)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(le), atol=1e-4, rtol=1e-3)
+
+    def test_pallas_path_matches_ref_path(self):
+        cfg_ref = tiny_cfg(variant="efficient", use_pallas=False)
+        cfg_pal = tiny_cfg(variant="efficient", use_pallas=True)
+        params = M.init_params(jax.random.PRNGKey(2), cfg_ref)
+        tokens, _ = data(cfg_ref)
+        np.testing.assert_allclose(
+            np.asarray(M.forward(cfg_ref, params, tokens)),
+            np.asarray(M.forward(cfg_pal, params, tokens)),
+            atol=1e-4, rtol=1e-3,
+        )
+
+    def test_conv_embed_changes_output_and_params(self):
+        cfg_lin = tiny_cfg(embed="linear")
+        cfg_conv = tiny_cfg(embed="conv")
+        p_lin = M.init_params(jax.random.PRNGKey(3), cfg_lin)
+        p_conv = M.init_params(jax.random.PRNGKey(3), cfg_conv)
+        assert M.num_params(p_conv) > M.num_params(p_lin)
+        assert "conv0_w" in p_conv and "conv0_w" not in p_lin
+        tokens, _ = data(cfg_conv)
+        logits = M.forward(cfg_conv, p_conv, tokens)
+        assert logits.shape == (4, 3)
+
+    def test_learned_pos_embedding(self):
+        cfg = tiny_cfg(pos="learned")
+        params = M.init_params(jax.random.PRNGKey(4), cfg)
+        assert "pos_embed" in params
+        tokens, _ = data(cfg)
+        assert M.forward(cfg, params, tokens).shape == (4, 3)
+
+    def test_token_permutation_changes_logits(self):
+        # Positional encoding must break permutation invariance.
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(5), cfg)
+        tokens, _ = data(cfg)
+        perm = jnp.flip(tokens, axis=1)
+        l1 = M.forward(cfg, params, tokens)
+        l2 = M.forward(cfg, params, perm)
+        assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
+
+    def test_qk_scores_shape(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(6), cfg)
+        tokens, _ = data(cfg, batch=1)
+        s = M.qk_scores_single(cfg, params, tokens[0], layer=1)
+        assert s.shape == (cfg.heads, cfg.seq_len, cfg.seq_len)
+        # normalized q (scale tau) x normalized k: |scores| <= tau
+        tau_max = float(jnp.max(params["block1"]["tau"]))
+        assert float(jnp.max(jnp.abs(s))) <= tau_max + 1e-4
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_fixed_batch(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(7), cfg)
+        m, v = T.init_opt_state(params)
+        tokens, labels = data(cfg, batch=8, seed=7)
+        tc = DEFAULT_TC
+        step_fn = jax.jit(lambda *a: T.train_step(cfg, tc, *a))
+        loss0 = None
+        state = (params, m, v)
+        for i in range(30):
+            p, mm, vv, loss, _ = step_fn(*state, jnp.asarray(i, jnp.int32), tokens, labels)
+            state = (p, mm, vv)
+            if loss0 is None:
+                loss0 = float(loss)
+        assert float(loss) < loss0, (loss0, float(loss))
+
+    def test_gradients_flow_to_all_params(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(8), cfg)
+        tokens, labels = data(cfg, batch=4, seed=8)
+        grads = jax.grad(lambda p: T.loss_and_acc(cfg, p, tokens, labels)[0])(params)
+        flat, _ = jax.tree_util.tree_flatten(grads)
+        nonzero = sum(bool(jnp.any(g != 0)) for g in flat)
+        assert nonzero >= len(flat) - 1, f"{nonzero}/{len(flat)} grads nonzero"
+
+    def test_tau_is_trained(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(9), cfg)
+        tokens, labels = data(cfg, batch=4, seed=9)
+        grads = jax.grad(lambda p: T.loss_and_acc(cfg, p, tokens, labels)[0])(params)
+        assert bool(jnp.any(grads["block0"]["tau"] != 0))
+
+    def test_lamb_vs_adamw_differ(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(10), cfg)
+        m, v = T.init_opt_state(params)
+        tokens, labels = data(cfg, batch=4, seed=10)
+        s = jnp.asarray(100, jnp.int32)  # past warmup
+        out_lamb = T.train_step(cfg, T.TrainConfig(optimizer="lamb"), params, m, v, s, tokens, labels)
+        out_adam = T.train_step(cfg, T.TrainConfig(optimizer="adamw"), params, m, v, s, tokens, labels)
+        d_lamb = out_lamb[0]["block0"]["wqkv"] - params["block0"]["wqkv"]
+        d_adam = out_adam[0]["block0"]["wqkv"] - params["block0"]["wqkv"]
+        assert float(jnp.max(jnp.abs(d_lamb - d_adam))) > 1e-9
+
+    def test_lr_schedule(self):
+        tc = T.TrainConfig(lr=1.0, warmup_steps=10, total_steps=110)
+        lr0 = float(T.lr_at(tc, jnp.asarray(0, jnp.int32)))
+        lr_w = float(T.lr_at(tc, jnp.asarray(10, jnp.int32)))
+        lr_mid = float(T.lr_at(tc, jnp.asarray(60, jnp.int32)))
+        lr_end = float(T.lr_at(tc, jnp.asarray(110, jnp.int32)))
+        assert lr0 == 0.0
+        assert abs(lr_w - 1.0) < 1e-6
+        assert 0.4 < lr_mid < 0.6
+        assert lr_end < 1e-6
+
+    def test_eval_step_matches_forward(self):
+        cfg = tiny_cfg()
+        params = M.init_params(jax.random.PRNGKey(11), cfg)
+        tokens, labels = data(cfg, batch=6, seed=11)
+        loss, acc = T.eval_step(cfg, params, tokens, labels)
+        logits = M.forward(cfg, params, tokens)
+        manual_acc = float(jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32)))
+        assert abs(float(acc) - manual_acc) < 1e-6
+        assert float(loss) > 0
+
+    def test_norm_ablation_stages_distinct(self):
+        tokens, labels = data(tiny_cfg(), batch=4, seed=12)
+        logits = {}
+        for stage in ("plain", "input", "full"):
+            cfg = tiny_cfg(variant="efficient", norm_stage=stage)
+            params = M.init_params(jax.random.PRNGKey(13), cfg)
+            logits[stage] = M.forward(cfg, params, tokens)
+        assert float(jnp.max(jnp.abs(logits["plain"] - logits["full"]))) > 1e-5
+        assert float(jnp.max(jnp.abs(logits["input"] - logits["full"]))) > 1e-6
+
+
+class TestConfigRegistry:
+    def test_registry_configs_valid(self):
+        for task in ("listops", "pixel", "textbytes"):
+            for variant in ("softmax", "direct", "efficient"):
+                cfg = model_cfg(task, variant)
+                assert cfg.d_embed % cfg.heads == 0
+                params = M.init_params(jax.random.PRNGKey(0), cfg)
+                assert M.num_params(params) > 0
+
+    def test_head_override(self):
+        cfg = model_cfg("pixel", "efficient", name="pixel_h16", heads=16)
+        assert cfg.heads == 16 and cfg.head_dim == 4

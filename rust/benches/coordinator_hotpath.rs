@@ -1,0 +1,132 @@
+//! L3 hot-path microbench (EXPERIMENTS.md §Perf): coordinator overhead
+//! must be negligible against executable runtime.
+//!
+//! Measures, with a zero-cost mock executor:
+//!   1. single-request end-to-end latency through router → batcher →
+//!      engine thread → response channel (pure coordination overhead);
+//!   2. batched throughput at max_batch=8;
+//!   3. raw batcher push/flush cost.
+//!
+//! Run: `cargo bench --bench coordinator_hotpath`
+
+use std::time::{Duration, Instant};
+use taylorshift::bench_support::{bench, fmt_seconds, BenchConfig, Table, write_json};
+use taylorshift::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use taylorshift::coordinator::engine::{BatchExecutor, Engine, EngineConfig};
+use taylorshift::coordinator::request::InferRequest;
+use taylorshift::coordinator::router::Route;
+use taylorshift::util::json::Json;
+
+struct NullExecutor {
+    sizes: Vec<usize>,
+}
+
+impl BatchExecutor for NullExecutor {
+    fn execute(&mut self, _route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(tokens.iter().map(|_| vec![0.0; 10]).collect())
+    }
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut table = Table::new(&["path", "per-op", "ops/s"]);
+    let mut series = Vec::new();
+
+    // 1. end-to-end single request, zero batching delay.
+    let engine = Engine::start_with(
+        EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        || Ok(NullExecutor { sizes: vec![1, 8] }),
+    )
+    .unwrap();
+    let tokens: Vec<i32> = (0..100).collect();
+    let t = bench("e2e_single", &cfg, || {
+        engine.infer(tokens.clone()).unwrap();
+    });
+    table.row(&[
+        "engine e2e (single, no delay)".into(),
+        fmt_seconds(t.mean_s),
+        format!("{:.0}", 1.0 / t.mean_s),
+    ]);
+    series.push(Json::from_pairs(vec![
+        ("path", Json::Str("e2e_single".into())),
+        ("mean_s", Json::Num(t.mean_s)),
+    ]));
+    drop(engine);
+
+    // 2. batched: 8 concurrent submitters per iteration.
+    let engine = Engine::start_with(
+        EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(5),
+            },
+            ..Default::default()
+        },
+        || Ok(NullExecutor { sizes: vec![1, 8] }),
+    )
+    .unwrap();
+    let t = bench("e2e_batch8", &cfg, || {
+        let rxs: Vec<_> = (0..8)
+            .map(|_| engine.submit(tokens.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+    table.row(&[
+        "engine e2e (8-request fused batch)".into(),
+        fmt_seconds(t.mean_s / 8.0),
+        format!("{:.0}", 8.0 / t.mean_s),
+    ]);
+    series.push(Json::from_pairs(vec![
+        ("path", Json::Str("e2e_batch8_per_req".into())),
+        ("mean_s", Json::Num(t.mean_s / 8.0)),
+    ]));
+    drop(engine);
+
+    // 3. raw batcher data structure.
+    let mut batcher = DynamicBatcher::new(BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+    });
+    let route = Route {
+        bucket: 128,
+        variant: taylorshift::attention::AttentionVariant::Direct,
+    };
+    let mut id = 0u64;
+    let t = bench("batcher_push", &cfg, || {
+        let now = Instant::now();
+        for _ in 0..64 {
+            id += 1;
+            let ready = batcher.push(route, InferRequest::new(id, vec![1; 8]), id, now);
+            std::hint::black_box(&ready);
+        }
+        batcher.flush_all();
+    });
+    table.row(&[
+        "batcher push+flush".into(),
+        fmt_seconds(t.mean_s / 64.0),
+        format!("{:.0}", 64.0 / t.mean_s),
+    ]);
+    series.push(Json::from_pairs(vec![
+        ("path", Json::Str("batcher_push".into())),
+        ("mean_s", Json::Num(t.mean_s / 64.0)),
+    ]));
+
+    println!("\n=== L3 coordinator hot path ===\n");
+    table.print();
+    println!(
+        "\ntarget: per-request coordination cost ≪ smallest executable time\n\
+         (serve_direct_infer_b1_n128 ≈ 1 ms on this CPU — see fig3 bench)."
+    );
+    write_json("coordinator_hotpath", &Json::Arr(series));
+}

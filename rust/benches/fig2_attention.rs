@@ -1,0 +1,112 @@
+//! Regenerates **Figure 2**: attention-module inference time (top) and
+//! memory (bottom) vs sequence length, for softmax attention and both
+//! TaylorShift implementations, at several head dimensions — including
+//! the empirical speed crossover N̂₀ and the analytical/entry-model
+//! memory crossover N̂₁.
+//!
+//! Timing runs rust-emitted PJRT executables (h=1, like the paper's
+//! single-head module benchmark); memory uses the paper's own
+//! entry-count model at fp32, since CPU PJRT exposes no VRAM analogue.
+//!
+//! Run: `cargo bench --bench fig2_attention`  (TS_BENCH_QUICK=1 to smoke)
+
+use taylorshift::analysis::{memory, transitions};
+use taylorshift::attention::selector;
+use taylorshift::bench_support::{bench, fmt_mib, fmt_seconds, BenchConfig, Table, write_json};
+use taylorshift::runtime::emitter::{self, EmitVariant};
+use taylorshift::runtime::Runtime;
+use taylorshift::tensor::Tensor;
+use taylorshift::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("TS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // d=64 pushes the sweep to N≈16k (N²d matmuls get slow on CPU);
+    // included only with TS_BENCH_FULL=1.
+    let full = std::env::var("TS_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let rt = Runtime::cpu()?;
+    let ds: &[usize] = if quick {
+        &[16]
+    } else if full {
+        &[8, 16, 32, 64]
+    } else {
+        &[8, 16, 32]
+    };
+    let mut all_series = Vec::new();
+
+    for &d in ds {
+        let n0 = transitions::n0(d as u64);
+        let n1 = transitions::n1(d as u64);
+        // Log-spaced N from 128 well past the speed crossover: the CPU
+        // crossover sits above the analytical N0 (memory-bound efficient
+        // path — §5.1's N̂0 > N0 observation), so sweep to ~8×N0.
+        let factor = if d >= 32 { 4.0 } else { 8.0 };
+        let max_n = if quick { (n0 * 2.0) as usize } else { (n0 * factor) as usize };
+        let mut ns = vec![];
+        let mut n = 128usize;
+        while n <= max_n {
+            ns.push(n);
+            n = ((n as f64 * 1.45) as usize).div_ceil(32) * 32;
+        }
+        let cfg = if quick {
+            BenchConfig { warmup_iters: 1, min_iters: 2, max_iters: 4, target_seconds: 0.15 }
+        } else {
+            BenchConfig { warmup_iters: 2, min_iters: 4, max_iters: 30, target_seconds: 0.6 }
+        };
+
+        println!("\n=== Fig 2, d = {d} (theory: N0={n0:.0}, N1={n1:.0}) ===\n");
+        let mut table = Table::new(&[
+            "N", "softmax", "direct", "efficient", "mem softmax/direct", "mem efficient",
+        ]);
+        let (mut t_dir, mut t_eff) = (Vec::new(), Vec::new());
+        for &n in &ns {
+            let q = Tensor::randn(&[n, d], 1);
+            let k = Tensor::randn(&[n, d], 2);
+            let v = Tensor::randn(&[n, d], 3);
+            let mut time_of = |variant: EmitVariant| -> anyhow::Result<f64> {
+                let exe = emitter::compile_attention(&rt, variant, n, d, 1.0)?;
+                Ok(bench(format!("{variant:?}_n{n}_d{d}"), &cfg, || {
+                    emitter::run_attention(&exe, &q, &k, &v).unwrap();
+                })
+                .mean_s)
+            };
+            let ts = time_of(EmitVariant::Softmax)?;
+            let td = time_of(EmitVariant::TaylorDirect)?;
+            let te = time_of(EmitVariant::TaylorEfficient)?;
+            t_dir.push(td);
+            t_eff.push(te);
+            let mem_d = memory::mib(memory::entries_direct(n as u64, d as u64), 4);
+            let mem_e = memory::mib(memory::entries_efficient(n as u64, d as u64), 4);
+            table.row(&[
+                n.to_string(),
+                fmt_seconds(ts),
+                fmt_seconds(td),
+                fmt_seconds(te),
+                fmt_mib(mem_d * 1024.0 * 1024.0),
+                fmt_mib(mem_e * 1024.0 * 1024.0),
+            ]);
+            all_series.push(Json::from_pairs(vec![
+                ("d", Json::Num(d as f64)),
+                ("n", Json::Num(n as f64)),
+                ("t_softmax", Json::Num(ts)),
+                ("t_direct", Json::Num(td)),
+                ("t_efficient", Json::Num(te)),
+                ("mem_direct_mib", Json::Num(mem_d)),
+                ("mem_efficient_mib", Json::Num(mem_e)),
+            ]));
+        }
+        table.print();
+        match selector::calibrate_crossover(&ns, &t_dir, &t_eff) {
+            Some(nhat0) => println!(
+                "\nempirical N̂0 = {nhat0:.0}   theory N0 = {n0:.0}   Δ = {:+.0}   (paper on A100: Δ ≈ 18d = {})",
+                nhat0 - n0,
+                18 * d
+            ),
+            None => println!("\nno empirical speed crossover within sweep (N ≤ {max_n})"),
+        }
+        println!("memory crossover (entry model): N1 = {n1:.0} — efficient wins beyond this");
+    }
+
+    write_json("fig2_attention", &Json::Arr(all_series));
+    println!("\nwrote bench_out/fig2_attention.json");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Regenerates **Table 2**: transition points N₀ (FLOP equality, Eq. 7)
+//! and N₁ (memory equality, Eq. 9) for typical head dimensions, and
+//! numerically verifies each against the raw cost models.
+//!
+//! Run: `cargo bench --bench table2_transitions`
+
+use taylorshift::analysis::{flops, memory, transitions};
+use taylorshift::bench_support::{write_json, Table};
+use taylorshift::util::json::Json;
+
+fn main() {
+    println!("\n=== Table 2: efficiency transition points ===\n");
+    let mut t = Table::new(&[
+        "d",
+        "N0 (speed)",
+        "N1 (memory)",
+        "bound d²+d+¾",
+        "bound ½d²+2d+½",
+        "FLOP check",
+        "entry check",
+    ]);
+    let mut rows = Vec::new();
+    for (d, n0, n1) in transitions::table2() {
+        // verification: direct is cheaper just below, efficient just above
+        let flop_ok = flops::ops_direct(n0 - 2, d) < flops::ops_efficient(n0 - 2, d)
+            && flops::ops_direct(n0 + 2, d) > flops::ops_efficient(n0 + 2, d);
+        let mem_ok = memory::entries_direct(n1 - 2, d) < memory::entries_efficient(n1 - 2, d)
+            && memory::entries_direct(n1 + 2, d) > memory::entries_efficient(n1 + 2, d);
+        t.row(&[
+            d.to_string(),
+            n0.to_string(),
+            n1.to_string(),
+            format!("{:.0}", transitions::n0_bound(d)),
+            format!("{:.0}", transitions::n1_bound(d)),
+            if flop_ok { "✓" } else { "✗" }.to_string(),
+            if mem_ok { "✓" } else { "✗" }.to_string(),
+        ]);
+        rows.push(Json::from_pairs(vec![
+            ("d", Json::Num(d as f64)),
+            ("n0", Json::Num(n0 as f64)),
+            ("n1", Json::Num(n1 as f64)),
+        ]));
+        assert!(flop_ok && mem_ok, "transition verification failed at d={d}");
+    }
+    t.print();
+    println!(
+        "\npaper quotes d=128 → N0=16513, N1=8446; we compute N0={}, N1={}",
+        transitions::n0(128).round(),
+        transitions::n1(128).round()
+    );
+    println!(
+        "d* (FLOP-optimal per-head dim, Sec 4.3) = {:.4} → ĥ0 = d_emb/d* > d_emb",
+        transitions::d_star_ops()
+    );
+    write_json("table2", &Json::Arr(rows));
+}

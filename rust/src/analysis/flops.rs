@@ -1,0 +1,124 @@
+//! Floating-point-operation counts for the attention variants
+//! (paper Section 4.1).
+
+/// FLOPs of direct-TaylorShift for one head (Eq. 5):
+/// `4N²d + 6N²`, decomposed as
+/// `2N²d` (QKᵀ) + `4N²` (elementwise ½x²+x+1) + `2N²` (normalize) +
+/// `2N²d` (multiply by V).
+pub fn ops_direct(n: u64, d: u64) -> u64 {
+    4 * n * n * d + 6 * n * n
+}
+
+/// FLOPs of efficient-TaylorShift for one head (Eq. 6):
+/// `N(4d³ + 10d² + 9d + 4)`.
+pub fn ops_efficient(n: u64, d: u64) -> u64 {
+    n * (4 * d * d * d + 10 * d * d + 9 * d + 4)
+}
+
+/// FLOPs of standard softmax attention. The paper notes (§4.1, Fig. 2)
+/// that softmax attention is "slightly higher" than direct-TaylorShift:
+/// the only difference is evaluating `exp` instead of `½x²+x+1` on the
+/// N² matrix. We charge exp at `EXP_FLOPS` flops/element (a common
+/// convention for transcendental cost on vector units).
+pub const EXP_FLOPS: u64 = 10;
+
+pub fn ops_softmax(n: u64, d: u64) -> u64 {
+    // 2N²d (QKᵀ) + EXP_FLOPS·N² (exp) + 2N² (normalize) + 2N²d (·V)
+    4 * n * n * d + (EXP_FLOPS + 2) * n * n
+}
+
+/// Breakdown of Eq. 6 by term — used by the §Perf analysis and to unit
+/// test the aggregate against a from-parts sum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EfficientBreakdown {
+    /// ops[Y_squ] = 4Nd²(d+1) + 2Nd² (tensor op on K, two matmuls, tensor op on Q)
+    pub squared_term: u64,
+    /// ops[QKᵀV] computed right-to-left = 4Nd(d+1)
+    pub linear_term: u64,
+    /// Σ_col V = N(d+1)
+    pub constant_term: u64,
+    /// scalar sums/multiplications = 3N(d+1)
+    pub combine: u64,
+    /// final normalization (Hadamard division) = Nd
+    pub normalize: u64,
+}
+
+impl EfficientBreakdown {
+    pub fn new(n: u64, d: u64) -> Self {
+        Self {
+            squared_term: 4 * n * d * d * (d + 1) + 2 * n * d * d,
+            linear_term: 4 * n * d * (d + 1),
+            constant_term: n * (d + 1),
+            combine: 3 * n * (d + 1),
+            normalize: n * d,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.squared_term + self.linear_term + self.constant_term + self.combine + self.normalize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficient_breakdown_matches_eq6() {
+        for n in [1u64, 7, 128, 1024, 100_000] {
+            for d in [1u64, 8, 16, 32, 64, 128] {
+                assert_eq!(
+                    EfficientBreakdown::new(n, d).total(),
+                    ops_efficient(n, d),
+                    "n={n} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn direct_decomposition_matches_eq5() {
+        // 2N²d + 4N² + 2N² + 2N²d
+        for n in [1u64, 16, 512] {
+            for d in [8u64, 64] {
+                let parts = 2 * n * n * d + 4 * n * n + 2 * n * n + 2 * n * n * d;
+                assert_eq!(parts, ops_direct(n, d));
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_slightly_above_direct() {
+        for n in [64u64, 1024] {
+            for d in [16u64, 64] {
+                assert!(ops_softmax(n, d) > ops_direct(n, d));
+                // but within a few percent for realistic d
+                let ratio = ops_softmax(n, d) as f64 / ops_direct(n, d) as f64;
+                assert!(ratio < 1.15, "ratio={ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn efficient_is_linear_in_n() {
+        let d = 32;
+        let base = ops_efficient(1000, d);
+        assert_eq!(ops_efficient(2000, d), 2 * base);
+        assert_eq!(ops_efficient(10_000, d), 10 * base);
+    }
+
+    #[test]
+    fn direct_is_quadratic_in_n() {
+        let d = 32;
+        let base = ops_direct(1000, d);
+        assert_eq!(ops_direct(2000, d), 4 * base);
+    }
+
+    #[test]
+    fn paper_example_magnitudes() {
+        // At d=64, N=16k the efficient variant must be well below direct.
+        assert!(ops_efficient(16_384, 64) < ops_direct(16_384, 64));
+        // At d=64, N=1000 (< N0≈4160) direct is cheaper.
+        assert!(ops_direct(1_000, 64) < ops_efficient(1_000, 64));
+    }
+}

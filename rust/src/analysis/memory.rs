@@ -1,0 +1,106 @@
+//! Peak simultaneous tensor-entry counts (paper Section 4.2).
+//!
+//! The paper accounts memory as the number of matrix entries alive at the
+//! peak of each implementation, excluding parameters. We reproduce both
+//! expressions and provide MiB conversion at a chosen element width
+//! (paper Table 5 reports "MiB@16", i.e. fp16).
+
+/// Peak entries of direct-TaylorShift:
+/// `dN` (V) + `2N²` (QKᵀ and the elementwise result).
+pub fn entries_direct(n: u64, d: u64) -> u64 {
+    d * n + 2 * n * n
+}
+
+/// Peak entries of efficient-TaylorShift (Eq. 8):
+/// `d²(d+1)` (A_mod) + `2dN` (Q, K) + `(d+1)N` (V‖1) + `d²N` (K^⊠2).
+pub fn entries_efficient(n: u64, d: u64) -> u64 {
+    d * d * (d + 1) + 2 * d * n + (d + 1) * n + d * d * n
+}
+
+/// Peak entries of softmax attention — identical shape analysis to
+/// direct-TaylorShift (score matrix + result + V); exp is in-place, so
+/// only one N×N result buffer is needed alongside the scores.
+pub fn entries_softmax(n: u64, d: u64) -> u64 {
+    entries_direct(n, d)
+}
+
+/// Convert an entry count to bytes at the given element width.
+pub fn bytes(entries: u64, bytes_per_elem: u64) -> u64 {
+    entries * bytes_per_elem
+}
+
+/// Convert an entry count to MiB at the given element width.
+pub fn mib(entries: u64, bytes_per_elem: u64) -> f64 {
+    bytes(entries, bytes_per_elem) as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::transitions;
+
+    #[test]
+    fn eq8_decomposition() {
+        let (n, d) = (1000u64, 16u64);
+        let a_mod = d * d * (d + 1);
+        let qk = 2 * d * n;
+        let v = (d + 1) * n;
+        let kbox = d * d * n;
+        assert_eq!(entries_efficient(n, d), a_mod + qk + v + kbox);
+    }
+
+    #[test]
+    fn efficient_wins_beyond_n1() {
+        for d in [8u64, 16, 32, 64, 128] {
+            let n1 = transitions::n1(d);
+            let above = (n1.ceil() as u64) + 1;
+            let below = (n1.floor() as u64).saturating_sub(1).max(1);
+            assert!(
+                entries_efficient(above, d) < entries_direct(above, d),
+                "d={d} above={above}"
+            );
+            assert!(
+                entries_efficient(below, d) >= entries_direct(below, d),
+                "d={d} below={below}"
+            );
+        }
+    }
+
+    #[test]
+    fn mib_conversion() {
+        // 2^20 entries at 1 byte = 1 MiB
+        assert!((mib(1 << 20, 1) - 1.0).abs() < 1e-12);
+        assert!((mib(1 << 20, 2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn direct_memory_quadratic() {
+        let d = 64;
+        let e1 = entries_direct(1000, d);
+        let e2 = entries_direct(2000, d);
+        // quadratic term dominates
+        assert!(e2 > 3 * e1);
+        assert!(e2 < 4 * e1 + 4 * d * 1000);
+    }
+
+    #[test]
+    fn efficient_memory_linear() {
+        let d = 64;
+        let fixed = d * d * (d + 1);
+        let e1 = entries_efficient(1000, d) - fixed;
+        let e2 = entries_efficient(2000, d) - fixed;
+        assert_eq!(e2, 2 * e1);
+    }
+
+    #[test]
+    fn paper_fig3_claim_half_memory_at_1500() {
+        // Paper §5.2: at 1500 tokens the efficient transformer needs
+        // ~half the memory, at 2000 only 35%. Attention-level entry
+        // counts at d=32 (Fig. 3 setup) should show the same direction.
+        let d = 32;
+        let r1500 = entries_efficient(1500, d) as f64 / entries_direct(1500, d) as f64;
+        let r2000 = entries_efficient(2000, d) as f64 / entries_direct(2000, d) as f64;
+        assert!(r1500 < 0.80, "r1500={r1500}");
+        assert!(r2000 < r1500);
+    }
+}

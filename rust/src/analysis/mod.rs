@@ -1,0 +1,14 @@
+//! The paper's analytical cost models (Section 4 + Appendix A).
+//!
+//! Everything here is closed-form and hardware-agnostic: FLOP counts
+//! (Eqs. 5–6), memory entry counts (Eq. 8 and the direct-variant
+//! expression), the speed/memory transition points N₀/N₁ (Eqs. 7/9),
+//! the multi-head scaling laws of Section 4.3 with their optima ĥ₀/ĥ₁
+//! (Eqs. 10–12, App. A.2/A.3), and a TPU roofline/VMEM estimator for
+//! the Pallas BlockSpecs (DESIGN.md §Hardware-Adaptation).
+
+pub mod flops;
+pub mod memory;
+pub mod mhsa;
+pub mod roofline;
+pub mod transitions;

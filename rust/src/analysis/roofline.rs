@@ -1,0 +1,232 @@
+//! TPU roofline / VMEM estimator for the Pallas kernels
+//! (DESIGN.md §Hardware-Adaptation, EXPERIMENTS.md §Perf L1).
+//!
+//! Pallas runs under `interpret=True` on this CPU-only environment, so
+//! real-TPU efficiency cannot be *measured*; it is *estimated* from the
+//! kernel's BlockSpec: VMEM residency of all live blocks, the MXU-eligible
+//! FLOP fraction (matmul FLOPs / total FLOPs), tile alignment with the
+//! 128×128 systolic array, and the HBM↔VMEM traffic the block schedule
+//! implies. These are the numbers DESIGN.md §Perf reports.
+
+use crate::analysis::flops;
+
+/// TPU v4-like core budget (per-core values; conservative defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct TpuSpec {
+    /// VMEM bytes per core.
+    pub vmem_bytes: u64,
+    /// Peak MXU throughput, FLOP/s (bf16 with f32 accumulation).
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// MXU tile edge (lane dimension).
+    pub mxu_tile: u64,
+}
+
+impl Default for TpuSpec {
+    fn default() -> Self {
+        Self {
+            vmem_bytes: 16 << 20,   // 16 MiB
+            peak_flops: 137.5e12,   // ~ v4 core nominal bf16
+            hbm_bw: 600e9,          // hbm per core share
+            mxu_tile: 128,
+        }
+    }
+}
+
+/// Static description of one Pallas kernel block schedule, mirrored from
+/// the BlockSpecs in `python/compile/kernels/*.py`.
+#[derive(Clone, Debug)]
+pub struct KernelSchedule {
+    pub name: String,
+    /// Per-grid-step VMEM-resident buffers: (label, elements).
+    pub blocks: Vec<(String, u64)>,
+    /// Total matmul (MXU-eligible) FLOPs for the whole kernel.
+    pub matmul_flops: u64,
+    /// Total vector-unit (VPU) FLOPs.
+    pub vector_flops: u64,
+    /// Total HBM bytes moved in + out across the grid.
+    pub hbm_bytes: u64,
+    /// Bytes per element (4 = f32; 2 = bf16 inputs).
+    pub bytes_per_elem: u64,
+}
+
+/// Roofline estimate for a schedule on a given TPU spec.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub vmem_bytes: u64,
+    pub fits_vmem: bool,
+    /// Matmul share of total FLOPs (MXU utilization ceiling).
+    pub mxu_fraction: f64,
+    /// FLOPs per HBM byte.
+    pub arithmetic_intensity: f64,
+    /// Compute-bound if intensity exceeds the machine balance point.
+    pub compute_bound: bool,
+    /// Estimated runtime = max(compute time, memory time), seconds.
+    pub runtime_s: f64,
+    /// Fraction of peak FLOP/s achieved under the roofline model.
+    pub efficiency: f64,
+}
+
+impl KernelSchedule {
+    pub fn total_flops(&self) -> u64 {
+        self.matmul_flops + self.vector_flops
+    }
+
+    pub fn vmem_footprint(&self) -> u64 {
+        self.blocks.iter().map(|(_, e)| e).sum::<u64>() * self.bytes_per_elem
+    }
+
+    pub fn estimate(&self, spec: &TpuSpec) -> Estimate {
+        let vmem = self.vmem_footprint();
+        let total = self.total_flops() as f64;
+        let mxu_fraction = if self.total_flops() == 0 {
+            0.0
+        } else {
+            self.matmul_flops as f64 / total
+        };
+        let intensity = if self.hbm_bytes == 0 {
+            f64::INFINITY
+        } else {
+            total / self.hbm_bytes as f64
+        };
+        let balance = spec.peak_flops / spec.hbm_bw;
+        // VPU flops run far below MXU peak; model VPU at peak/8.
+        let compute_time = self.matmul_flops as f64 / spec.peak_flops
+            + self.vector_flops as f64 / (spec.peak_flops / 8.0);
+        let memory_time = self.hbm_bytes as f64 / spec.hbm_bw;
+        let runtime = compute_time.max(memory_time);
+        Estimate {
+            vmem_bytes: vmem,
+            fits_vmem: vmem <= spec.vmem_bytes,
+            mxu_fraction,
+            arithmetic_intensity: intensity,
+            compute_bound: intensity > balance,
+            runtime_s: runtime,
+            efficiency: if runtime > 0.0 {
+                (total / spec.peak_flops) / runtime
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// Build the schedule for the efficient-TaylorShift Pallas kernel as
+/// implemented in `tsa_efficient.py`: grid over N-blocks of size `bn`;
+/// VMEM holds one block each of Q, K, V(+1), the Q^⊠2/K^⊠2 expansion of
+/// the current block, and the (d²+d+1)×(d+1) accumulator A_full.
+pub fn efficient_schedule(n: u64, d: u64, bn: u64, bytes_per_elem: u64) -> KernelSchedule {
+    let d2 = d * d;
+    let blocks = vec![
+        ("q_block".to_string(), bn * d),
+        ("k_block".to_string(), bn * d),
+        ("v_block".to_string(), bn * (d + 1)),
+        ("kbox_block".to_string(), bn * d2),
+        ("qbox_block".to_string(), bn * d2),
+        ("a_full_acc".to_string(), (d2 + d + 1) * (d + 1)),
+        ("y_block".to_string(), bn * (d + 1)),
+    ];
+    let eff = flops::EfficientBreakdown::new(n, d);
+    // Matmul-eligible: the two d²-sized contractions + the linear term.
+    let matmul = eff.squared_term - 2 * n * d2 /* tensor expansions are VPU */ + eff.linear_term;
+    let vector = eff.total() - matmul;
+    // HBM traffic: read Q,K,V once, write Y once (streaming schedule).
+    let hbm = (3 * n * d + n * (d + 1) + n * d) * bytes_per_elem;
+    KernelSchedule {
+        name: format!("tsa_efficient n={n} d={d} bn={bn}"),
+        blocks,
+        matmul_flops: matmul,
+        vector_flops: vector,
+        hbm_bytes: hbm,
+        bytes_per_elem,
+    }
+}
+
+/// Schedule for direct-TaylorShift: grid over (row-block, col-block)
+/// tiles of the N×N score matrix.
+pub fn direct_schedule(n: u64, d: u64, bn: u64, bytes_per_elem: u64) -> KernelSchedule {
+    let blocks = vec![
+        ("q_block".to_string(), bn * d),
+        ("k_block".to_string(), bn * d),
+        ("v_block".to_string(), bn * d),
+        ("scores_tile".to_string(), bn * bn),
+        ("acc".to_string(), bn * (d + 1)),
+    ];
+    let total = flops::ops_direct(n, d);
+    let matmul = 4 * n * n * d; // QKᵀ and ·V
+    // HBM: Q read once per row-block; K,V re-read once per row-block pass.
+    let passes = n.div_ceil(bn);
+    let hbm = (n * d + passes * 2 * n * d + n * d) * bytes_per_elem;
+    KernelSchedule {
+        name: format!("tsa_direct n={n} d={d} bn={bn}"),
+        blocks,
+        matmul_flops: matmul,
+        vector_flops: total - matmul,
+        hbm_bytes: hbm,
+        bytes_per_elem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficient_fits_vmem_for_paper_configs() {
+        let spec = TpuSpec::default();
+        // d=64, block 256 rows, f32: the ⊠-expanded blocks are bn·d²
+        // elements, so bn must stay ≤ ~384 at d=64 to fit 16 MiB VMEM.
+        let s = efficient_schedule(16_384, 64, 256, 4);
+        let e = s.estimate(&spec);
+        assert!(e.fits_vmem, "vmem={} bytes", e.vmem_bytes);
+    }
+
+    #[test]
+    fn oversized_block_overflows_vmem() {
+        let spec = TpuSpec::default();
+        // d=128 ⇒ d²=16384; bn=2048 blocks of d² elements are 128 MiB.
+        let s = efficient_schedule(16_384, 128, 2048, 4);
+        assert!(!s.estimate(&spec).fits_vmem);
+    }
+
+    #[test]
+    fn mxu_fraction_high_for_both() {
+        let e = efficient_schedule(8192, 64, 256, 4).estimate(&TpuSpec::default());
+        assert!(e.mxu_fraction > 0.9, "eff mxu={}", e.mxu_fraction);
+        let d = direct_schedule(8192, 64, 256, 4).estimate(&TpuSpec::default());
+        assert!(d.mxu_fraction > 0.9, "dir mxu={}", d.mxu_fraction);
+    }
+
+    #[test]
+    fn efficient_is_compute_bound_at_long_n() {
+        // The streaming schedule reads QKV once ⇒ intensity ~ O(d²),
+        // far beyond machine balance for d ≥ 32.
+        let e = efficient_schedule(100_000, 64, 512, 4).estimate(&TpuSpec::default());
+        assert!(e.compute_bound);
+        assert!(e.efficiency > 0.5, "eff={}", e.efficiency);
+    }
+
+    #[test]
+    fn runtime_crossover_matches_analysis_direction() {
+        let spec = TpuSpec::default();
+        let d = 64;
+        // Far above N0: efficient should be estimated faster.
+        let t_eff = efficient_schedule(32_768, d, 512, 4).estimate(&spec).runtime_s;
+        let t_dir = direct_schedule(32_768, d, 512, 4).estimate(&spec).runtime_s;
+        assert!(t_eff < t_dir);
+        // Far below N0: direct faster.
+        let t_eff = efficient_schedule(256, d, 128, 4).estimate(&spec).runtime_s;
+        let t_dir = direct_schedule(256, d, 128, 4).estimate(&spec).runtime_s;
+        assert!(t_dir < t_eff);
+    }
+
+    #[test]
+    fn flop_totals_consistent_with_analysis() {
+        let (n, d) = (4096u64, 32u64);
+        let s = efficient_schedule(n, d, 256, 4);
+        assert_eq!(s.total_flops(), flops::ops_efficient(n, d));
+        let s = direct_schedule(n, d, 256, 4);
+        assert_eq!(s.total_flops(), flops::ops_direct(n, d));
+    }
+}

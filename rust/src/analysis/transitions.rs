@@ -1,0 +1,200 @@
+//! Efficiency transition points (paper Eqs. 7 & 9, Table 2) and the
+//! optimal-head-count analysis (Section 4.3, Appendix A.2/A.3).
+
+/// Speed transition point N₀(d) (Eq. 7): the sequence length where
+/// direct- and efficient-TaylorShift need equal FLOPs:
+/// `N₀ = (4d³ + 10d² + 9d + 4) / (4d + 6)`.
+pub fn n0(d: u64) -> f64 {
+    let d = d as f64;
+    (4.0 * d.powi(3) + 10.0 * d.powi(2) + 9.0 * d + 4.0) / (4.0 * d + 6.0)
+}
+
+/// Upper bound from Eq. 7: `N₀ ≤ d² + d + ¾`.
+pub fn n0_bound(d: u64) -> f64 {
+    let d = d as f64;
+    d * d + d + 0.75
+}
+
+/// Memory transition point N₁(d) (Eq. 9): where peak entry counts of
+/// both implementations agree:
+/// `N₁ = ¼ [d² + 2d + 1 + √(d⁴ + 12d³ + 14d² + 4d + 1)]`.
+pub fn n1(d: u64) -> f64 {
+    let d = d as f64;
+    let disc = d.powi(4) + 12.0 * d.powi(3) + 14.0 * d.powi(2) + 4.0 * d + 1.0;
+    0.25 * (d * d + 2.0 * d + 1.0 + disc.sqrt())
+}
+
+/// Upper bound from Eq. 9: `N₁ ≤ ½d² + 2d + ½`.
+pub fn n1_bound(d: u64) -> f64 {
+    let d = d as f64;
+    0.5 * d * d + 2.0 * d + 0.5
+}
+
+/// The per-head dimension `d ≈ 0.52` that minimizes ops_eff[MHSA]
+/// (Eq. 10/12): the unique positive root of `9d³ + 10d² = 4`, via the
+/// Cardano solution of Appendix A.2 with `α = ∛(3374 + 54√3561)`.
+///
+/// NOTE: the paper's final printed formula, `d = α/27 + (100/729)α⁻¹ −
+/// 10/27`, carries a transcription slip: with `y = α/27` the second
+/// Cardano term is `100/(729 y) = 100/(27 α)`, not `100/(729 α)`. Only
+/// the corrected form satisfies `9d³ + 10d² = 4` and yields the paper's
+/// own quoted `d ≈ 0.52` (the printed form gives 0.33). We assert the
+/// cubic in tests.
+pub fn d_star_ops() -> f64 {
+    let alpha = (3374.0 + 54.0 * 3561.0_f64.sqrt()).cbrt();
+    alpha / 27.0 + 100.0 / (27.0 * alpha) - 10.0 / 27.0
+}
+
+/// Optimal head count for FLOPs: `ĥ₀ ≈ d_emb / 0.52` (Section 4.3).
+/// Larger than any admissible h ≤ d_emb ⇒ "more heads is always faster"
+/// for efficient-TaylorShift within the allowed range.
+pub fn h0_hat(d_emb: u64) -> f64 {
+    d_emb as f64 / d_star_ops()
+}
+
+/// Appendix A.3: the memory-optimal per-head dimension satisfies
+/// `N = 2d³ + (N+1)d²`, which forces `d < 1` and hence `ĥ₁ > d_emb`.
+/// Solve for d given N by bisection (the LHS−RHS is monotone in d>0).
+pub fn d_star_memory(n: u64) -> f64 {
+    let n = n as f64;
+    let f = |d: f64| 2.0 * d.powi(3) + (n + 1.0) * d * d - n;
+    let (mut lo, mut hi) = (0.0_f64, 1.0_f64);
+    debug_assert!(f(lo) < 0.0 && f(hi) > 0.0);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Optimal head count for memory: `ĥ₁ = d_emb / d_star_memory(N) > d_emb`.
+pub fn h1_hat(d_emb: u64, n: u64) -> f64 {
+    d_emb as f64 / d_star_memory(n)
+}
+
+/// Paper Table 2, regenerated: (d, N₀ rounded, N₁ rounded) rows for the
+/// typical head dimensions.
+pub fn table2() -> Vec<(u64, u64, u64)> {
+    [8u64, 16, 32, 64, 128]
+        .iter()
+        .map(|&d| (d, n0(d).round() as u64, n1(d).round() as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{flops, memory};
+
+    #[test]
+    fn table2_d128_matches_paper() {
+        // The only fully-legible Table 2 column in the source: d = 128
+        // gives N0 = 16513, N1 = 8446.
+        assert_eq!(n0(128).round() as u64, 16513);
+        assert_eq!(n1(128).round() as u64, 8446);
+    }
+
+    #[test]
+    fn n0_is_flop_equality_point() {
+        for d in [8u64, 16, 32, 64, 128] {
+            let n = n0(d);
+            let below = n.floor() as u64;
+            let above = n.ceil() as u64 + 1;
+            assert!(
+                flops::ops_direct(below, d) <= flops::ops_efficient(below, d),
+                "d={d}"
+            );
+            assert!(
+                flops::ops_direct(above, d) >= flops::ops_efficient(above, d),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn n1_is_entry_equality_point() {
+        for d in [8u64, 16, 32, 64, 128] {
+            let n = n1(d);
+            // Eq. 9 derivation: entries equal at N1 exactly (real root).
+            let e_t = |n: f64| (d * d) as f64 * (d + 1) as f64 + 2.0 * (d as f64) * n
+                + (d + 1) as f64 * n
+                + (d * d) as f64 * n;
+            let e_d = |n: f64| (d as f64) * n + 2.0 * n * n;
+            assert!((e_t(n) - e_d(n)).abs() / e_d(n) < 1e-9, "d={d}");
+        }
+    }
+
+    #[test]
+    fn bounds_hold() {
+        for d in [1u64, 2, 8, 16, 32, 64, 128, 256] {
+            assert!(n0(d) <= n0_bound(d) + 1e-9, "d={d}");
+            assert!(n1(d) <= n1_bound(d) + 1e-9, "d={d}");
+        }
+    }
+
+    #[test]
+    fn n1_well_below_n0() {
+        // Paper: "N1 is considerably smaller than N0". The gap widens
+        // with d (ratio → ½); at d=8 it is ≈ 0.64.
+        for d in [8u64, 16, 32, 64, 128] {
+            assert!(n1(d) < 0.75 * n0(d), "d={d}: {} vs {}", n1(d), n0(d));
+        }
+        assert!(n1(128) < 0.52 * n0(128));
+    }
+
+    #[test]
+    fn d_star_is_cubic_root() {
+        let d = d_star_ops();
+        assert!((9.0 * d.powi(3) + 10.0 * d.powi(2) - 4.0).abs() < 1e-6);
+        assert!((d - 0.52).abs() < 0.005, "paper quotes ≈0.52, got {d}");
+    }
+
+    #[test]
+    fn h0_hat_exceeds_demb() {
+        // ⇒ within {1..d_emb} more heads always reduce ops.
+        for demb in [64u64, 192, 256, 348, 512] {
+            assert!(h0_hat(demb) > demb as f64);
+        }
+    }
+
+    #[test]
+    fn d_star_memory_below_one_and_h1_above_demb() {
+        for n in [100u64, 1024, 100_000] {
+            let d = d_star_memory(n);
+            assert!(d > 0.0 && d < 1.0, "n={n} d={d}");
+            // Check it satisfies N = 2d³ + (N+1)d².
+            let lhs = n as f64;
+            let rhs = 2.0 * d.powi(3) + (n as f64 + 1.0) * d * d;
+            assert!((lhs - rhs).abs() / lhs < 1e-9);
+            assert!(h1_hat(256, n) > 256.0);
+        }
+    }
+
+    #[test]
+    fn table2_monotone_in_d() {
+        let rows = table2();
+        assert_eq!(rows.len(), 5);
+        for w in rows.windows(2) {
+            assert!(w[0].1 < w[1].1);
+            assert!(w[0].2 < w[1].2);
+        }
+        // All rows: N1 < N0.
+        for (_, n0v, n1v) in rows {
+            assert!(n1v < n0v);
+        }
+    }
+
+    #[test]
+    fn fig2_observation_memory_crossover_before_speed() {
+        // For d=64: paper abstract says memory-efficient from ~800 tokens
+        // and faster from ~1700 at the full-transformer level; at the
+        // module level Eq. 7/9 give N0(64)=4161, N1(64)=2174.
+        assert_eq!(n0(64).round() as u64, 4161);
+        assert_eq!(n1(64).round() as u64, 2174);
+        let _ = memory::entries_efficient(2174, 64); // cross-module sanity
+    }
+}

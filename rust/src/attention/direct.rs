@@ -1,0 +1,168 @@
+//! Direct-TaylorShift (paper Section 3.1 + normalization of Section 3.3).
+//!
+//! Materializes the N×N Taylor-softmax attention matrix
+//! `T-SM(QKᵀ) = normalize(1 + QKᵀ + ½(QKᵀ)⊙²)` and multiplies by V —
+//! `O(N²d)` time, `O(N²)` memory, the fast choice for `N < N₀(d)`.
+
+use crate::tensor::Tensor;
+
+/// Plain direct-TaylorShift, Eq. (1): no input/output normalization
+/// (the "Plain impl." row of the Table 4 ablation). `q,k,v: N×d`.
+pub fn taylor_direct_plain(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let n = q.shape()[0];
+    let scores = q.matmul(&k.transpose());
+    let mut a = scores.map(|x| 1.0 + x + 0.5 * x * x);
+    // Row-wise ℓ1 normalization (entries are ≥ 0 for even k).
+    for i in 0..n {
+        let row = a.row_mut(i);
+        let denom: f32 = row.iter().map(|x| x.abs()).sum::<f32>().max(1e-12);
+        for x in row.iter_mut() {
+            *x /= denom;
+        }
+    }
+    a.matmul(v)
+}
+
+/// Direct-TaylorShift with the paper's normalization scheme, kept
+/// interchangeable with [`super::efficient::taylor_efficient`]: rows of
+/// Q are ℓ2-normalized and scaled by the temperature `tau`, rows of K
+/// ℓ2-normalized, and the output is scaled by `√(N/d)` so its mean size
+/// is independent of N and d (Section 3.3).
+///
+/// With `normalized = false` this skips the q/k normalization but keeps
+/// the output scaling — the "impl. + norm." vs "+output norm." stages of
+/// the Table 4 ablation are exposed through [`taylor_direct_stages`].
+pub fn taylor_direct(q: &Tensor, k: &Tensor, v: &Tensor, tau: f32, normalized: bool) -> Tensor {
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    let (qn, kn) = if normalized {
+        (q.normalize_rows(tau), k.normalize_rows(1.0))
+    } else {
+        (q.clone(), k.clone())
+    };
+    let y = taylor_direct_plain(&qn, &kn, v);
+    y.scale((n as f32 / d as f32).sqrt())
+}
+
+/// Ablation stages of Table 4 for the direct implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormStage {
+    /// Eq. (1) as-is.
+    Plain,
+    /// + input normalization (q/k rows on the sphere, temperature τ).
+    InputNorm,
+    /// + output normalization to mean size 1 (× √(N/d)).
+    InputAndOutputNorm,
+}
+
+pub fn taylor_direct_stages(
+    stage: NormStage,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    tau: f32,
+) -> Tensor {
+    match stage {
+        NormStage::Plain => taylor_direct_plain(q, k, v),
+        NormStage::InputNorm => {
+            taylor_direct_plain(&q.normalize_rows(tau), &k.normalize_rows(1.0), v)
+        }
+        NormStage::InputAndOutputNorm => taylor_direct(q, k, v, tau, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force per-element Taylor-softmax attention to pin down the
+    /// matrix form.
+    fn brute_force(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        let (n, d) = (q.shape()[0], q.shape()[1]);
+        let mut out = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            let mut weights = vec![0.0f32; n];
+            for j in 0..n {
+                let mut dot = 0.0;
+                for c in 0..d {
+                    dot += q.at2(i, c) * k.at2(j, c);
+                }
+                weights[j] = 1.0 + dot + 0.5 * dot * dot;
+            }
+            let denom: f32 = weights.iter().sum();
+            for j in 0..n {
+                for c in 0..d {
+                    *out.at2_mut(i, c) += weights[j] / denom * v.at2(j, c);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn plain_matches_brute_force() {
+        let (n, d) = (17, 5);
+        let q = Tensor::randn(&[n, d], 1).scale(0.3);
+        let k = Tensor::randn(&[n, d], 2).scale(0.3);
+        let v = Tensor::randn(&[n, d], 3);
+        let a = taylor_direct_plain(&q, &k, &v);
+        let b = brute_force(&q, &k, &v);
+        assert!(a.allclose(&b, 1e-4, 1e-4), "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn rows_of_tsm_form_distribution() {
+        // For even k the Taylor softmax is a probability distribution:
+        // attention output of constant V must be that constant.
+        let (n, d) = (12, 4);
+        let q = Tensor::randn(&[n, d], 4);
+        let k = Tensor::randn(&[n, d], 5);
+        let v = Tensor::full(&[n, d], 3.5);
+        let y = taylor_direct_plain(&q, &k, &v);
+        for &x in y.data() {
+            assert!((x - 3.5).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn normalized_output_scale_invariant_to_input_magnitude() {
+        // Input normalization makes the output invariant to rescaling Q/K.
+        let (n, d) = (20, 8);
+        let q = Tensor::randn(&[n, d], 6);
+        let k = Tensor::randn(&[n, d], 7);
+        let v = Tensor::randn(&[n, d], 8);
+        let y1 = taylor_direct(&q, &k, &v, 1.0, true);
+        let y2 = taylor_direct(&q.scale(100.0), &k.scale(0.01), &v, 1.0, true);
+        assert!(y1.allclose(&y2, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn temperature_sharpens_attention() {
+        // With τ → large, attention concentrates on the best-matching key;
+        // output approaches that key's value row.
+        let d = 4;
+        let q = Tensor::new(&[1, d], vec![1.0, 0.0, 0.0, 0.0]);
+        let k = Tensor::new(&[3, d], vec![1.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let v = Tensor::new(&[3, d], vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let y_sharp = taylor_direct_plain(&q.scale(10.0), &k, &v);
+        // weight for key0: 1+10+50=61; key1: 1-10+50=41; key2: 1
+        let w = [61.0f32, 41.0, 1.0];
+        let s: f32 = w.iter().sum();
+        assert!((y_sharp.at2(0, 0) - w[0] / s).abs() < 1e-4);
+        assert!((y_sharp.at2(0, 1) - w[1] / s).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stages_are_distinct() {
+        let (n, d) = (16, 8);
+        let q = Tensor::randn(&[n, d], 9).scale(2.0);
+        let k = Tensor::randn(&[n, d], 10).scale(2.0);
+        let v = Tensor::randn(&[n, d], 11);
+        let plain = taylor_direct_stages(NormStage::Plain, &q, &k, &v, 1.0);
+        let inorm = taylor_direct_stages(NormStage::InputNorm, &q, &k, &v, 1.0);
+        let full = taylor_direct_stages(NormStage::InputAndOutputNorm, &q, &k, &v, 1.0);
+        assert!(!plain.allclose(&inorm, 1e-3, 1e-3));
+        // output norm is a pure rescale of the input-normed result
+        let scale = (n as f32 / d as f32).sqrt();
+        assert!(inorm.scale(scale).allclose(&full, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,281 @@
+//! Efficient-TaylorShift — paper Algorithm 1 (Sections 3.2–3.3).
+//!
+//! Computes the *same function* as [`super::direct`] in `O(Nd³)` time and
+//! `O(Nd²)` memory by linearizing the squared Gram term through the
+//! row-wise tensor product: `(QKᵀ)⊙² V = Q^⊠2 ((K^⊠2)ᵀ V)`, evaluated
+//! right-to-left, with nominator and denominator carried jointly by
+//! prepending a ones-column to V.
+
+use crate::tensor::Tensor;
+
+/// Algorithm 1: efficient-TaylorShift with normalization.
+///
+/// * `q, k, v` — `N×d` per-head inputs.
+/// * `tau` — learnable per-head temperature (Section 3.3).
+///
+/// Returns the `N×d` attention output; bitwise-comparable (up to f32
+/// rounding) with `taylor_direct(q, k, v, tau, true)`.
+pub fn taylor_efficient(q: &Tensor, k: &Tensor, v: &Tensor, tau: f32) -> Tensor {
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    assert_eq!(k.shape(), &[n, d]);
+    assert_eq!(v.shape(), &[n, d]);
+
+    // Line 4: α = d^(1/4).
+    let alpha = (d as f32).powf(0.25);
+
+    // Line 5: V ← (1/N) ((√(d/N)·1_N) ∘ V) ∈ R^{N×(d+1)}.
+    // The ones column carries the denominator; pre-scaling it by √(d/N)
+    // realizes the output normalization √(N/d) at zero extra cost
+    // (paper footnote 8).
+    let denom_col = Tensor::full(&[n, 1], (d as f32 / n as f32).sqrt());
+    let v_aug = denom_col.concat_cols(v).scale(1.0 / n as f32);
+
+    // Line 6: Q ← α·τ·Q/‖Q‖ row-wise, K ← α·K/‖K‖ row-wise.
+    let qn = q.normalize_rows(alpha * tau);
+    let kn = k.normalize_rows(alpha);
+
+    // Line 7: A_mod ← (K ⊠ K)ᵀ V   (d² × (d+1)).
+    let kbox = kn.boxtimes(&kn);
+    let a_mod = kbox.transpose().matmul(&v_aug);
+
+    // Line 8: Ŷ ← (Q ⊠ Q) A_mod   (N × (d+1)).
+    let qbox = qn.boxtimes(&qn);
+    let y_sq = qbox.matmul(&a_mod);
+
+    // Line 9: Ŷ ← ½Ŷ + α²·Q(KᵀV) + α⁴·Σᵢ V_i.
+    // (The α-powers restore the Taylor coefficients after the d^¼ input
+    // scaling — footnote 7.)
+    let ktv = kn.transpose().matmul(&v_aug); // d × (d+1)
+    let y_lin = qn.matmul(&ktv); // N × (d+1)
+    let col_sums = v_aug.col_sums(); // (d+1)
+    let a2 = alpha * alpha;
+    let a4 = a2 * a2;
+    let mut y_hat = Tensor::zeros(&[n, d + 1]);
+    for i in 0..n {
+        let sq = y_sq.row(i);
+        let lin = y_lin.row(i);
+        let out = y_hat.row_mut(i);
+        for j in 0..=d {
+            out[j] = 0.5 * sq[j] + a2 * lin[j] + a4 * col_sums.data()[j];
+        }
+    }
+
+    // Lines 10–11: split off denominator, Hadamard division.
+    let (y_denom, y_nom) = y_hat.split_cols(1);
+    let mut y = y_nom;
+    for i in 0..n {
+        let denom = y_denom.at2(i, 0);
+        debug_assert!(denom != 0.0, "zero denominator at row {i}");
+        let row = y.row_mut(i);
+        for x in row.iter_mut() {
+            *x /= denom;
+        }
+    }
+    y
+}
+
+/// Efficient-TaylorShift WITHOUT the normalization scheme — the naive
+/// linearization whose intermediate values grow as Table 1 predicts
+/// (`A_mod ~ (N+1)/√d`, `Y_denom ~ N(d+2)/2d`, …) and which overflows /
+/// fails to converge in training (Fig. 4, Appendix B.1). Kept for the
+/// ablation and the divergence demo.
+pub fn taylor_efficient_unnormalized(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    let denom_col = Tensor::ones(&[n, 1]);
+    let v_aug = denom_col.concat_cols(v);
+    let kbox = k.boxtimes(k);
+    let a_mod = kbox.transpose().matmul(&v_aug);
+    let qbox = q.boxtimes(q);
+    let y_sq = qbox.matmul(&a_mod);
+    let ktv = k.transpose().matmul(&v_aug);
+    let y_lin = q.matmul(&ktv);
+    let col_sums = v_aug.col_sums();
+    let mut y_hat = Tensor::zeros(&[n, d + 1]);
+    for i in 0..n {
+        for j in 0..=d {
+            y_hat.row_mut(i)[j] =
+                0.5 * y_sq.at2(i, j) + y_lin.at2(i, j) + col_sums.data()[j];
+        }
+    }
+    let (y_denom, y_nom) = y_hat.split_cols(1);
+    let mut y = y_nom;
+    for i in 0..n {
+        let denom = y_denom.at2(i, 0);
+        let row = y.row_mut(i);
+        for x in row.iter_mut() {
+            *x /= denom;
+        }
+    }
+    y
+}
+
+/// Intermediate-expression mean sizes (row norms) for the scaling study
+/// of Table 1 / Fig. 5: returns
+/// `(‖A_mod‖, ‖(QKᵀ)²V‖, ‖QKᵀV‖, |Y_denom|, ‖Y‖)` means for inputs with
+/// unit-sphere rows (the paper's sampling regime, *without* the
+/// counteracting normalization — this is what motivates it).
+pub fn intermediate_sizes(q: &Tensor, k: &Tensor, v: &Tensor) -> (f64, f64, f64, f64, f64) {
+    let n = q.shape()[0];
+    let denom_col = Tensor::ones(&[n, 1]);
+    let v_aug = denom_col.concat_cols(v);
+    let kbox = k.boxtimes(k);
+    let a_mod = kbox.transpose().matmul(&v_aug);
+    let qbox = q.boxtimes(q);
+    let y_sq = qbox.matmul(&a_mod); // (QKᵀ)²·(1∘V)
+    let ktv = k.transpose().matmul(&v_aug);
+    let y_lin = q.matmul(&ktv); // QKᵀ·(1∘V)
+    let col_sums = v_aug.col_sums();
+    let mut y_hat = Tensor::zeros(&[n, v_aug.shape()[1]]);
+    for i in 0..n {
+        for j in 0..v_aug.shape()[1] {
+            y_hat.row_mut(i)[j] =
+                0.5 * y_sq.at2(i, j) + y_lin.at2(i, j) + col_sums.data()[j];
+        }
+    }
+    let (y_denom, y_nom) = y_hat.split_cols(1);
+    let mut y = y_nom.clone();
+    for i in 0..n {
+        let denom = y_denom.at2(i, 0);
+        for x in y.row_mut(i).iter_mut() {
+            *x /= denom;
+        }
+    }
+    // Strip the denominator column from the squared/linear diagnostics so
+    // sizes match the paper's expressions over V alone. Matrix-valued
+    // intermediates use the Frobenius norm (the measure under which the
+    // paper's (N+1)/√d and N/d laws hold — the un-scaled denominator
+    // column dominates A_mod); per-row results use mean row norms.
+    let (_, y_sq_v) = y_sq.split_cols(1);
+    let (_, y_lin_v) = y_lin.split_cols(1);
+    (
+        a_mod.frobenius(),
+        y_sq_v.frobenius(),
+        y_lin_v.frobenius(),
+        y_denom.mean_row_norm(),
+        y.mean_row_norm(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::direct;
+
+    #[test]
+    fn efficient_equals_direct_normalized() {
+        for (n, d, seed) in [(8usize, 4usize, 1u64), (33, 8, 2), (64, 16, 3), (100, 3, 4)] {
+            let q = Tensor::randn(&[n, d], seed);
+            let k = Tensor::randn(&[n, d], seed + 100);
+            let v = Tensor::randn(&[n, d], seed + 200);
+            let tau = 1.0 + seed as f32 * 0.25;
+            let eff = taylor_efficient(&q, &k, &v, tau);
+            let dir = direct::taylor_direct(&q, &k, &v, tau, true);
+            assert!(
+                eff.allclose(&dir, 1e-3, 1e-4),
+                "n={n} d={d} diff={}",
+                eff.max_abs_diff(&dir)
+            );
+        }
+    }
+
+    #[test]
+    fn unnormalized_matches_plain_direct() {
+        // Without normalization the two formulations are also identical
+        // mathematically (Section 3.2 derivation).
+        let (n, d) = (20, 6);
+        let q = Tensor::randn(&[n, d], 7).scale(0.4);
+        let k = Tensor::randn(&[n, d], 8).scale(0.4);
+        let v = Tensor::randn(&[n, d], 9);
+        let eff = taylor_efficient_unnormalized(&q, &k, &v);
+        let dir = direct::taylor_direct_plain(&q, &k, &v);
+        assert!(
+            eff.allclose(&dir, 1e-3, 1e-4),
+            "diff={}",
+            eff.max_abs_diff(&dir)
+        );
+    }
+
+    #[test]
+    fn output_mean_size_near_one() {
+        // Section 3.3: normalization keeps E‖Y_row‖ ≈ 1 independent of N, d.
+        for (n, d) in [(256usize, 8usize), (1024, 16), (512, 32)] {
+            let q = Tensor::randn(&[n, d], 11);
+            let k = Tensor::randn(&[n, d], 12);
+            let v = Tensor::rand_unit_rows(n, d, 13);
+            let y = taylor_efficient(&q, &k, &v, 1.0);
+            let size = y.mean_row_norm();
+            // "Consistent" means O(1) across the N sweep — near-uniform
+            // attention over unit-sphere values lands around 1/√d, far
+            // from the unnormalized pipeline's N-dependent growth.
+            assert!(
+                (0.05..5.0).contains(&size),
+                "n={n} d={d} mean row norm={size}"
+            );
+        }
+    }
+
+    #[test]
+    fn unnormalized_intermediates_grow_linearly_with_n() {
+        // Table 1: ‖A_mod‖ ≈ (N+1)/√d and |Y_denom| ≈ N(d+2)/(2d).
+        let d = 8;
+        let sizes: Vec<(f64, f64)> = [128usize, 256, 512]
+            .iter()
+            .map(|&n| {
+                let q = Tensor::rand_unit_rows(n, d, 21);
+                let k = Tensor::rand_unit_rows(n, d, 22);
+                let v = Tensor::rand_unit_rows(n, d, 23);
+                let (a_mod, _, _, y_denom, _) = intermediate_sizes(&q, &k, &v);
+                (a_mod, y_denom)
+            })
+            .collect();
+        // Doubling N should roughly double both (±40% tolerance — these
+        // are stochastic fits; the precise check lives in the python
+        // scaling study with 16k samples).
+        for w in sizes.windows(2) {
+            let ratio_a = w[1].0 / w[0].0;
+            let ratio_d = w[1].1 / w[0].1;
+            assert!((1.5..2.6).contains(&ratio_a), "A_mod ratio={ratio_a}");
+            assert!((1.5..2.6).contains(&ratio_d), "Y_denom ratio={ratio_d}");
+        }
+    }
+
+    #[test]
+    fn table1_growth_directions() {
+        // Directional reproduction of Table 1 (the exact prefactors are
+        // empirical fits under the paper's norm convention; the python
+        // scaling study in `compile/scaling_study.py` fits the full
+        // curves). Here: A_mod and Y_denom grow with N while the final
+        // normalized Y *shrinks* with N (~√(d/N)) — exactly the
+        // imbalance the Section 3.3 normalization corrects.
+        let d = 16usize;
+        let measure = |n: usize| {
+            let q = Tensor::rand_unit_rows(n, d, 31);
+            let k = Tensor::rand_unit_rows(n, d, 32);
+            let v = Tensor::rand_unit_rows(n, d, 33);
+            intermediate_sizes(&q, &k, &v)
+        };
+        let (a1, _, _, dn1, y1) = measure(128);
+        let (a2, _, _, dn2, y2) = measure(1024);
+        assert!(a2 > 4.0 * a1, "A_mod should grow ~N: {a1} -> {a2}");
+        assert!(dn2 > 4.0 * dn1, "Y_denom should grow ~N: {dn1} -> {dn2}");
+        assert!(y2 < y1, "normalized Y should shrink with N: {y1} -> {y2}");
+        // Y ≈ √(d/N) within a factor of ~4.
+        let pred = (d as f64 / 1024.0).sqrt();
+        assert!(y2 / pred < 4.0 && y2 / pred > 0.25, "Y {y2} vs {pred}");
+    }
+
+    #[test]
+    fn linear_memory_no_nxn_allocation() {
+        // Structural property: efficient path never allocates an N×N
+        // tensor. We can't intercept allocations, but we can run a size
+        // that would OOM-ish under N² f32 in a debug heap check… instead
+        // assert the function completes quickly for N=4096, d=4 (N²=16M
+        // entries would be slow in the direct path's matmul).
+        let (n, d) = (4096, 4);
+        let q = Tensor::randn(&[n, d], 41);
+        let k = Tensor::randn(&[n, d], 42);
+        let v = Tensor::randn(&[n, d], 43);
+        let y = taylor_efficient(&q, &k, &v, 1.0);
+        assert_eq!(y.shape(), &[n, d]);
+    }
+}

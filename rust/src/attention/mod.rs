@@ -1,0 +1,149 @@
+//! Pure-rust reference implementations of the paper's attention
+//! mechanisms, plus the adaptive variant selector.
+//!
+//! These are the L3-side ground truth: integration tests compare every
+//! AOT artifact and every `XlaBuilder`-emitted executable against these
+//! functions, and the coordinator uses [`selector`] to realize the
+//! paper's "(and Back)" — choosing direct `O(N²d)` or efficient
+//! `O(Nd³)` per sequence length.
+
+pub mod direct;
+pub mod efficient;
+pub mod selector;
+pub mod softmax;
+
+use crate::tensor::Tensor;
+
+/// Which implementation of the (identical) attention function to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AttentionVariant {
+    /// Materializes the N×N score matrix — `O(N²d)` time, `O(N²)` memory.
+    Direct,
+    /// Linearized via the ⊠ tensor trick — `O(Nd³)` time, `O(Nd²)` memory.
+    Efficient,
+    /// Standard softmax attention (baseline, not TaylorShift).
+    Softmax,
+}
+
+impl AttentionVariant {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "direct" => Some(Self::Direct),
+            "efficient" => Some(Self::Efficient),
+            "softmax" => Some(Self::Softmax),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Direct => "direct",
+            Self::Efficient => "efficient",
+            Self::Softmax => "softmax",
+        }
+    }
+}
+
+impl std::fmt::Display for AttentionVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Run one attention head with the chosen variant. TaylorShift variants
+/// use the paper's normalization (Algorithm 1) with temperature `tau`;
+/// softmax uses `1/√d` scaling.
+pub fn run_variant(
+    variant: AttentionVariant,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    tau: f32,
+) -> Tensor {
+    match variant {
+        AttentionVariant::Direct => direct::taylor_direct(q, k, v, tau, true),
+        AttentionVariant::Efficient => efficient::taylor_efficient(q, k, v, tau),
+        AttentionVariant::Softmax => softmax::softmax_attention(q, k, v),
+    }
+}
+
+/// Multi-head self-attention over already-projected per-head tensors:
+/// `q/k/v` have shape `[h, n, d]` flattened as h consecutive `n×d`
+/// blocks; output is `[n, h·d]` (heads concatenated feature-wise).
+pub fn mhsa(
+    variant: AttentionVariant,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    h: usize,
+    tau: f32,
+) -> Tensor {
+    assert_eq!(q.shape(), k.shape());
+    assert_eq!(q.shape(), v.shape());
+    assert_eq!(q.rank(), 3);
+    assert_eq!(q.shape()[0], h);
+    let (n, d) = (q.shape()[1], q.shape()[2]);
+    let head_elems = n * d;
+    let mut out = Tensor::zeros(&[n, h * d]);
+    for head in 0..h {
+        let slice = |t: &Tensor| {
+            Tensor::new(
+                &[n, d],
+                t.data()[head * head_elems..(head + 1) * head_elems].to_vec(),
+            )
+        };
+        let y = run_variant(variant, &slice(q), &slice(k), &slice(v), tau);
+        for i in 0..n {
+            out.row_mut(i)[head * d..(head + 1) * d].copy_from_slice(y.row(i));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in [
+            AttentionVariant::Direct,
+            AttentionVariant::Efficient,
+            AttentionVariant::Softmax,
+        ] {
+            assert_eq!(AttentionVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(AttentionVariant::parse("nope"), None);
+    }
+
+    #[test]
+    fn run_variant_direct_equals_efficient() {
+        let (n, d) = (24, 8);
+        let q = Tensor::randn(&[n, d], 1);
+        let k = Tensor::randn(&[n, d], 2);
+        let v = Tensor::randn(&[n, d], 3);
+        let a = run_variant(AttentionVariant::Direct, &q, &k, &v, 1.3);
+        let b = run_variant(AttentionVariant::Efficient, &q, &k, &v, 1.3);
+        assert!(a.allclose(&b, 1e-4, 1e-4), "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn mhsa_shape_and_head_independence() {
+        let (h, n, d) = (4, 16, 8);
+        let q = Tensor::randn(&[h, n, d], 4);
+        let k = Tensor::randn(&[h, n, d], 5);
+        let v = Tensor::randn(&[h, n, d], 6);
+        let y = mhsa(AttentionVariant::Efficient, &q, &k, &v, h, 1.0);
+        assert_eq!(y.shape(), &[n, h * d]);
+        // Head 0 output must equal single-head attention on head-0 slices.
+        let q0 = Tensor::new(&[n, d], q.data()[..n * d].to_vec());
+        let k0 = Tensor::new(&[n, d], k.data()[..n * d].to_vec());
+        let v0 = Tensor::new(&[n, d], v.data()[..n * d].to_vec());
+        let y0 = efficient::taylor_efficient(&q0, &k0, &v0, 1.0);
+        for i in 0..n {
+            for j in 0..d {
+                assert!((y.at2(i, j) - y0.at2(i, j)).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! The "(and Back)" of the paper title, as a scheduling policy.
+//!
+//! Direct- and efficient-TaylorShift compute the same function, so a
+//! serving system can pick whichever is cheaper for each sequence
+//! length. The selector encodes three policies:
+//!
+//! * **analytical** — switch at the FLOP-equality point N₀(d) (Eq. 7);
+//! * **empirical rule** — the paper measures N̂₀ − N₀ ≈ 18·d on an A100
+//!   (§5.1), so switch at N₀(d) + 18d;
+//! * **calibrated** — fit the crossover from measured (N, time) samples
+//!   of both variants on *this* machine (what `examples/crossover_sweep`
+//!   produces and the coordinator consumes).
+//!
+//! Memory-constrained mode switches at N₁(d) instead (Eq. 9), since the
+//! memory crossover comes much earlier than the speed crossover.
+
+use crate::analysis::transitions;
+use crate::attention::AttentionVariant;
+use crate::util::stats;
+
+/// What the selector optimizes for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize time: switch at (a possibly calibrated) N₀.
+    Speed,
+    /// Minimize peak memory: switch at N₁.
+    Memory,
+}
+
+/// Crossover source.
+#[derive(Clone, Debug)]
+enum Policy {
+    Analytical,
+    EmpiricalRule,
+    /// Explicit crossover sequence length per head dimension.
+    Calibrated(Vec<(usize, f64)>),
+}
+
+/// Chooses [`AttentionVariant::Direct`] below the crossover and
+/// [`AttentionVariant::Efficient`] above it.
+#[derive(Clone, Debug)]
+pub struct Selector {
+    policy: Policy,
+    objective: Objective,
+}
+
+impl Selector {
+    /// Hardware-agnostic: crossover at the Table 2 values.
+    pub fn analytical() -> Self {
+        Self {
+            policy: Policy::Analytical,
+            objective: Objective::Speed,
+        }
+    }
+
+    /// The paper's A100 observation N̂₀ ≈ N₀ + 18d.
+    pub fn empirical_rule() -> Self {
+        Self {
+            policy: Policy::EmpiricalRule,
+            objective: Objective::Speed,
+        }
+    }
+
+    /// From measured crossovers `(d, n_cross)` (e.g. produced by
+    /// `examples/crossover_sweep`). Lookup interpolates/extrapolates in d.
+    pub fn calibrated(mut points: Vec<(usize, f64)>) -> Self {
+        assert!(!points.is_empty(), "need at least one calibration point");
+        points.sort_by_key(|p| p.0);
+        Self {
+            policy: Policy::Calibrated(points),
+            objective: Objective::Speed,
+        }
+    }
+
+    /// Load a calibration written by `examples/crossover_sweep`
+    /// (`bench_out/crossover.json`): `{"points": [{"d": .., "crossover": ..}]}`.
+    pub fn from_json_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let points = json
+            .get("points")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("calibration missing 'points'"))?
+            .iter()
+            .map(|p| {
+                Some((
+                    p.get("d")?.as_usize()?,
+                    p.get("crossover")?.as_f64()?,
+                ))
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow::anyhow!("malformed calibration point"))?;
+        anyhow::ensure!(!points.is_empty(), "empty calibration");
+        Ok(Self::calibrated(points))
+    }
+
+    /// Switch objective to memory (uses N₁ for analytical policies).
+    pub fn for_memory(mut self) -> Self {
+        self.objective = Objective::Memory;
+        self
+    }
+
+    /// The crossover sequence length for head dimension `d`.
+    pub fn crossover(&self, d: usize) -> f64 {
+        let analytical = match self.objective {
+            Objective::Speed => transitions::n0(d as u64),
+            Objective::Memory => transitions::n1(d as u64),
+        };
+        match &self.policy {
+            Policy::Analytical => analytical,
+            Policy::EmpiricalRule => match self.objective {
+                // §5.1: speed crossover shifts by ≈18d on real hardware;
+                // the memory crossover matches theory within 0.6%.
+                Objective::Speed => analytical + 18.0 * d as f64,
+                Objective::Memory => analytical,
+            },
+            Policy::Calibrated(points) => interpolate(points, d),
+        }
+    }
+
+    /// Pick the variant for a sequence of length `n` at head dim `d`.
+    pub fn select(&self, n: usize, d: usize) -> AttentionVariant {
+        if (n as f64) < self.crossover(d) {
+            AttentionVariant::Direct
+        } else {
+            AttentionVariant::Efficient
+        }
+    }
+}
+
+/// Piecewise-linear interpolation in d with flat extrapolation.
+fn interpolate(points: &[(usize, f64)], d: usize) -> f64 {
+    let df = d as f64;
+    if df <= points[0].0 as f64 {
+        return points[0].1;
+    }
+    if df >= points[points.len() - 1].0 as f64 {
+        return points[points.len() - 1].1;
+    }
+    for w in points.windows(2) {
+        let (d0, c0) = (w[0].0 as f64, w[0].1);
+        let (d1, c1) = (w[1].0 as f64, w[1].1);
+        if df >= d0 && df <= d1 {
+            let t = (df - d0) / (d1 - d0);
+            return c0 + t * (c1 - c0);
+        }
+    }
+    unreachable!()
+}
+
+/// Calibrate a speed crossover from timing curves of both variants:
+/// `ns[i]` with `t_direct[i]`, `t_efficient[i]` seconds. Returns the
+/// interpolated first intersection, or `None` when the curves do not
+/// cross in the sampled range (caller falls back to the analytical
+/// point).
+pub fn calibrate_crossover(ns: &[usize], t_direct: &[f64], t_efficient: &[f64]) -> Option<f64> {
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    // direct starts cheaper; crossover where it stops being cheaper.
+    stats::crossover(&xs, t_direct, t_efficient)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{pair, run, Config, Gen};
+
+    #[test]
+    fn analytical_matches_table2() {
+        let s = Selector::analytical();
+        // d=64: N0 ≈ 4161.
+        assert_eq!(s.select(4000, 64), AttentionVariant::Direct);
+        assert_eq!(s.select(4300, 64), AttentionVariant::Efficient);
+        // d=16: N0 = (4·4096+10·256+144+4)/70 ≈ 271.
+        assert_eq!(s.select(200, 16), AttentionVariant::Direct);
+        assert_eq!(s.select(300, 16), AttentionVariant::Efficient);
+    }
+
+    #[test]
+    fn memory_objective_switches_earlier() {
+        for d in [8usize, 16, 32, 64, 128] {
+            let speed = Selector::analytical();
+            let mem = Selector::analytical().for_memory();
+            assert!(mem.crossover(d) < speed.crossover(d), "d={d}");
+        }
+    }
+
+    #[test]
+    fn empirical_rule_shifts_late() {
+        for d in [16usize, 64] {
+            let a = Selector::analytical();
+            let e = Selector::empirical_rule();
+            assert!((e.crossover(d) - a.crossover(d) - 18.0 * d as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn calibrated_interpolates() {
+        let s = Selector::calibrated(vec![(16, 500.0), (64, 5000.0)]);
+        assert_eq!(s.crossover(16), 500.0);
+        assert_eq!(s.crossover(64), 5000.0);
+        let mid = s.crossover(40);
+        assert!(mid > 500.0 && mid < 5000.0);
+        // flat extrapolation
+        assert_eq!(s.crossover(8), 500.0);
+        assert_eq!(s.crossover(128), 5000.0);
+    }
+
+    #[test]
+    fn calibrate_crossover_from_synthetic_curves() {
+        let ns: Vec<usize> = (1..20).map(|i| i * 100).collect();
+        // direct ~ aN², efficient ~ bN with crossing at N = b/a = 1000.
+        let t_dir: Vec<f64> = ns.iter().map(|&n| 1e-9 * (n * n) as f64).collect();
+        let t_eff: Vec<f64> = ns.iter().map(|&n| 1e-6 * n as f64).collect();
+        let cross = calibrate_crossover(&ns, &t_dir, &t_eff).unwrap();
+        assert!((cross - 1000.0).abs() < 1.0, "cross={cross}");
+    }
+
+    #[test]
+    fn calibration_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ts_cal_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("crossover.json");
+        std::fs::write(
+            &path,
+            r#"{"points": [{"d": 16, "crossover": 975, "analytical_n0": 273},
+                           {"d": 8, "crossover": 220}]}"#,
+        )
+        .unwrap();
+        let s = Selector::from_json_file(&path).unwrap();
+        assert_eq!(s.crossover(16), 975.0);
+        assert_eq!(s.crossover(8), 220.0);
+        assert_eq!(s.select(900, 16), AttentionVariant::Direct); // below calibrated
+        assert_eq!(s.select(1000, 16), AttentionVariant::Efficient);
+        std::fs::write(&path, r#"{"points": []}"#).unwrap();
+        assert!(Selector::from_json_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_selection_monotone_in_n() {
+        // If efficient is selected at n, it stays selected for all n' > n.
+        run(
+            Config::default().cases(256),
+            pair(Gen::usize_range(1, 20_000), Gen::usize_range(1, 128)),
+            |&(n, d)| {
+                let s = Selector::analytical();
+                match s.select(n, d) {
+                    AttentionVariant::Efficient => {
+                        s.select(n + 1, d) == AttentionVariant::Efficient
+                            && s.select(n * 2, d) == AttentionVariant::Efficient
+                    }
+                    AttentionVariant::Direct => true,
+                    _ => false,
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_crossover_increases_with_d() {
+        run(
+            Config::default().cases(128),
+            Gen::usize_range(2, 127),
+            |&d| {
+                let s = Selector::analytical();
+                s.crossover(d + 1) > s.crossover(d)
+            },
+        );
+    }
+}

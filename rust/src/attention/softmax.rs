@@ -1,0 +1,82 @@
+//! Standard softmax attention (Vaswani et al.) — the paper's baseline.
+
+use crate::tensor::Tensor;
+
+/// `softmax(QKᵀ/√d) V` with numerically-stable row-max subtraction.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    assert_eq!(k.shape()[1], d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = q.matmul(&k.transpose()).scale(scale);
+    for i in 0..n {
+        let row = scores.row_mut(i);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    scores.matmul(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one_property() {
+        // Constant V passes through unchanged.
+        let (n, d) = (16, 8);
+        let q = Tensor::randn(&[n, d], 1);
+        let k = Tensor::randn(&[n, d], 2);
+        let v = Tensor::full(&[n, d], -2.0);
+        let y = softmax_attention(&q, &k, &v);
+        for &x in y.data() {
+            assert!((x + 2.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn stable_under_large_scores() {
+        let (n, d) = (8, 4);
+        let q = Tensor::randn(&[n, d], 3).scale(100.0);
+        let k = Tensor::randn(&[n, d], 4).scale(100.0);
+        let v = Tensor::randn(&[n, d], 5);
+        let y = softmax_attention(&q, &k, &v);
+        assert!(y.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn taylor_approximates_softmax_for_small_scores() {
+        // For ‖q‖,‖k‖ small the 2nd-order Taylor softmax tracks softmax
+        // closely (the approximation view of [12] with its error bounds).
+        let (n, d) = (24, 8);
+        let q = Tensor::randn(&[n, d], 6).scale(0.1);
+        let k = Tensor::randn(&[n, d], 7).scale(0.1);
+        let v = Tensor::randn(&[n, d], 8);
+        // Undo the 1/√d scaling by pre-scaling q.
+        let q_scaled = q.scale((d as f32).sqrt());
+        let soft = softmax_attention(&q_scaled, &k, &v);
+        let taylor = crate::attention::direct::taylor_direct_plain(&q, &k, &v);
+        assert!(
+            soft.allclose(&taylor, 0.05, 0.02),
+            "diff={}",
+            soft.max_abs_diff(&taylor)
+        );
+    }
+
+    #[test]
+    fn attends_to_matching_key() {
+        let d = 2;
+        let q = Tensor::new(&[1, d], vec![10.0, 0.0]);
+        let k = Tensor::new(&[2, d], vec![10.0, 0.0, -10.0, 0.0]);
+        let v = Tensor::new(&[2, d], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = softmax_attention(&q, &k, &v);
+        assert!(y.at2(0, 0) > 0.99);
+        assert!(y.at2(0, 1) < 0.01);
+    }
+}

@@ -1,0 +1,238 @@
+//! Benchmark harness (criterion stand-in).
+//!
+//! Warmup + timed iterations with trimmed statistics, plus a fixed-width
+//! table printer so every bench regenerates its paper table/figure as
+//! aligned rows on stdout (and optionally as JSON for plotting).
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub label: String,
+    /// Trimmed mean seconds per iteration.
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("median_s", Json::Num(self.median_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("min_s", Json::Num(self.min_s)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Bench configuration: time-budgeted with iteration caps.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop when this much measurement time has accumulated.
+    pub target_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: 200,
+            target_seconds: 1.0,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Lighter settings for expensive cases (long sequences).
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_seconds: 2.0,
+        }
+    }
+
+    /// Quick mode for CI/smoke (env `TS_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("TS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 5,
+                target_seconds: 0.2,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Time `f`, which performs ONE iteration of the workload per call.
+pub fn bench(label: impl Into<String>, config: &BenchConfig, mut f: impl FnMut()) -> Timing {
+    for _ in 0..config.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(config.max_iters);
+    let budget_start = Instant::now();
+    while samples.len() < config.min_iters
+        || (samples.len() < config.max_iters
+            && budget_start.elapsed().as_secs_f64() < config.target_seconds)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        label: label.into(),
+        mean_s: stats::trimmed_mean(&samples, 0.1),
+        median_s: stats::median(&samples),
+        p95_s: stats::percentile(&samples, 0.95),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters: samples.len(),
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (cell, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", cell, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Human formatting helpers used across benches.
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+pub fn fmt_mib(bytes: f64) -> String {
+    format!("{:.1} MiB", bytes / (1024.0 * 1024.0))
+}
+
+/// Write a bench's JSON series next to stdout output (under `bench_out/`).
+pub fn write_json(name: &str, value: &Json) {
+    let dir = std::path::Path::new("bench_out");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{name}.json"));
+        let _ = std::fs::write(path, value.to_string_pretty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target_seconds: 0.05,
+        };
+        let t = bench("spin", &cfg, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(t.iters >= 5);
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.median_s);
+        assert!(t.median_s <= t.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["d", "N0", "N1"]);
+        t.row_str(&["8", "45", "25"]);
+        t.row_str(&["128", "16513", "8446"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("16513"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_seconds(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_seconds(3.2e-5), "32.0 µs");
+        assert_eq!(fmt_seconds(0.012), "12.00 ms");
+        assert_eq!(fmt_seconds(2.0), "2.00 s");
+        assert_eq!(fmt_mib(1024.0 * 1024.0 * 3.0), "3.0 MiB");
+    }
+}

@@ -1,0 +1,150 @@
+//! JSON-backed configuration for the binaries (server + trainer).
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::engine::EngineConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+/// Server configuration file schema:
+///
+/// ```json
+/// {
+///   "artifacts_dir": "artifacts",
+///   "prefix": "serve",
+///   "buckets": [128, 256, 512, 1024],
+///   "batch_sizes": [1, 8],
+///   "head_dim": 16,
+///   "max_batch": 8,
+///   "max_delay_ms": 5,
+///   "queue_limit": 256,
+///   "variant": "auto"
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: String,
+    pub prefix: String,
+    pub buckets: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub engine: EngineConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            prefix: "serve".into(),
+            buckets: vec![128, 256, 512, 1024],
+            batch_sizes: vec![1, 8],
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(v) = j.get("artifacts_dir").and_then(|x| x.as_str()) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("prefix").and_then(|x| x.as_str()) {
+            cfg.prefix = v.to_string();
+        }
+        if let Some(v) = j.get("buckets").and_then(|x| x.as_usize_vec()) {
+            cfg.buckets = v;
+        }
+        if let Some(v) = j.get("batch_sizes").and_then(|x| x.as_usize_vec()) {
+            cfg.batch_sizes = v;
+        }
+        let mut engine = EngineConfig {
+            buckets: cfg.buckets.clone(),
+            ..EngineConfig::default()
+        };
+        if let Some(v) = j.get("head_dim").and_then(|x| x.as_usize()) {
+            engine.head_dim = v;
+        }
+        let mut policy = BatchPolicy::default();
+        if let Some(v) = j.get("max_batch").and_then(|x| x.as_usize()) {
+            policy.max_batch = v;
+        }
+        if let Some(v) = j.get("max_delay_ms").and_then(|x| x.as_f64()) {
+            policy.max_delay = Duration::from_micros((v * 1000.0) as u64);
+        }
+        engine.policy = policy;
+        if let Some(v) = j.get("queue_limit").and_then(|x| x.as_usize()) {
+            engine.queue_limit = v;
+        }
+        if let Some(v) = j.get("variant").and_then(|x| x.as_str()) {
+            engine.forced_variant = match v {
+                "auto" => None,
+                other => Some(
+                    crate::attention::AttentionVariant::parse(other)
+                        .ok_or_else(|| anyhow!("bad variant '{other}'"))?,
+                ),
+            };
+        }
+        cfg.engine = engine;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ServerConfig::default();
+        assert_eq!(c.buckets, vec![128, 256, 512, 1024]);
+        assert_eq!(c.engine.head_dim, 16);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let j = Json::parse(
+            r#"{
+                "artifacts_dir": "art",
+                "prefix": "serve",
+                "buckets": [64, 128],
+                "batch_sizes": [1, 4],
+                "head_dim": 32,
+                "max_batch": 4,
+                "max_delay_ms": 2.5,
+                "queue_limit": 99,
+                "variant": "efficient"
+            }"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.artifacts_dir, "art");
+        assert_eq!(c.buckets, vec![64, 128]);
+        assert_eq!(c.engine.buckets, vec![64, 128]);
+        assert_eq!(c.engine.head_dim, 32);
+        assert_eq!(c.engine.policy.max_batch, 4);
+        assert_eq!(c.engine.policy.max_delay, Duration::from_micros(2500));
+        assert_eq!(c.engine.queue_limit, 99);
+        assert_eq!(
+            c.engine.forced_variant,
+            Some(crate::attention::AttentionVariant::Efficient)
+        );
+    }
+
+    #[test]
+    fn auto_variant_is_none() {
+        let j = Json::parse(r#"{"variant": "auto"}"#).unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.engine.forced_variant, None);
+    }
+
+    #[test]
+    fn bad_variant_errors() {
+        let j = Json::parse(r#"{"variant": "warp"}"#).unwrap();
+        assert!(ServerConfig::from_json(&j).is_err());
+    }
+}

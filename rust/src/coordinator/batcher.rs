@@ -1,0 +1,335 @@
+//! Dynamic batcher: per-bucket pending queues with a max-size /
+//! max-delay flush policy (the standard continuous-batching tradeoff:
+//! larger batches amortize execution, the delay cap bounds added
+//! latency).
+//!
+//! Pure data structure — no threads, no clocks of its own. The engine
+//! thread drives it with explicit `now` instants, which makes the flush
+//! policy deterministic and directly testable (including by property
+//! tests: conservation, FIFO order, deadline respect).
+
+use crate::coordinator::request::InferRequest;
+use crate::coordinator::router::Route;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A flushed group ready for execution.
+#[derive(Debug)]
+pub struct PendingBatch {
+    pub route: Route,
+    pub requests: Vec<(InferRequest, ResponderId)>,
+}
+
+/// Opaque ticket the engine uses to pair responses with waiters.
+pub type ResponderId = u64;
+
+struct Queue {
+    route: Route,
+    items: Vec<(InferRequest, ResponderId)>,
+    oldest: Option<Instant>,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are pending in a bucket.
+    pub max_batch: usize,
+    /// Flush any queue whose oldest request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+        }
+    }
+}
+
+/// The batcher: queues keyed by (bucket, variant).
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    queues: BTreeMap<(usize, u8), Queue>,
+    pending_total: usize,
+}
+
+fn variant_key(v: crate::attention::AttentionVariant) -> u8 {
+    match v {
+        crate::attention::AttentionVariant::Direct => 0,
+        crate::attention::AttentionVariant::Efficient => 1,
+        crate::attention::AttentionVariant::Softmax => 2,
+    }
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            queues: BTreeMap::new(),
+            pending_total: 0,
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Total requests currently queued (for backpressure checks).
+    pub fn pending(&self) -> usize {
+        self.pending_total
+    }
+
+    /// Enqueue a routed request. Returns batches that became ready
+    /// because of this arrival (max_batch reached).
+    pub fn push(
+        &mut self,
+        route: Route,
+        request: InferRequest,
+        responder: ResponderId,
+        now: Instant,
+    ) -> Vec<PendingBatch> {
+        let key = (route.bucket, variant_key(route.variant));
+        let queue = self.queues.entry(key).or_insert_with(|| Queue {
+            route,
+            items: Vec::new(),
+            oldest: None,
+        });
+        if queue.items.is_empty() {
+            queue.oldest = Some(now);
+        }
+        queue.items.push((request, responder));
+        self.pending_total += 1;
+        if queue.items.len() >= self.policy.max_batch {
+            let batch = Self::drain_queue(queue, self.policy.max_batch);
+            self.pending_total -= batch.requests.len();
+            vec![batch]
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Flush every queue whose oldest entry has exceeded max_delay.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<PendingBatch> {
+        let mut out = Vec::new();
+        for queue in self.queues.values_mut() {
+            while !queue.items.is_empty()
+                && queue
+                    .oldest
+                    .map(|t| now.duration_since(t) >= self.policy.max_delay)
+                    .unwrap_or(false)
+            {
+                let batch = Self::drain_queue(queue, self.policy.max_batch);
+                self.pending_total -= batch.requests.len();
+                out.push(batch);
+            }
+        }
+        out
+    }
+
+    /// Flush everything regardless of age (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<PendingBatch> {
+        let mut out = Vec::new();
+        for queue in self.queues.values_mut() {
+            while !queue.items.is_empty() {
+                let batch = Self::drain_queue(queue, self.policy.max_batch);
+                self.pending_total -= batch.requests.len();
+                out.push(batch);
+            }
+        }
+        out
+    }
+
+    /// Next instant at which a queue becomes due, if any (engine uses
+    /// this for its recv timeout).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter(|q| !q.items.is_empty())
+            .filter_map(|q| q.oldest)
+            .map(|t| t + self.policy.max_delay)
+            .min()
+    }
+
+    fn drain_queue(queue: &mut Queue, max: usize) -> PendingBatch {
+        let take = queue.items.len().min(max);
+        let requests: Vec<_> = queue.items.drain(..take).collect();
+        queue.oldest = if queue.items.is_empty() {
+            None
+        } else {
+            // Remaining entries inherited the arrival order; their oldest
+            // is the first remaining request's enqueue time.
+            Some(queue.items[0].0.enqueued_at)
+        };
+        PendingBatch {
+            route: queue.route,
+            requests,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionVariant;
+    use crate::testing::prop::{run, Config, Gen};
+
+    fn route(bucket: usize) -> Route {
+        Route {
+            bucket,
+            variant: if bucket > 256 {
+                AttentionVariant::Efficient
+            } else {
+                AttentionVariant::Direct
+            },
+        }
+    }
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest::new(id, vec![1, 2, 3])
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_secs(60),
+        });
+        let now = Instant::now();
+        assert!(b.push(route(128), req(1), 1, now).is_empty());
+        assert!(b.push(route(128), req(2), 2, now).is_empty());
+        let ready = b.push(route(128), req(3), 3, now);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        b.push(route(512), req(1), 1, t0);
+        assert!(b.flush_due(t0 + Duration::from_millis(5)).is_empty());
+        let ready = b.flush_due(t0 + Duration::from_millis(11));
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].route.bucket, 512);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn buckets_do_not_mix() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(60),
+        });
+        let now = Instant::now();
+        b.push(route(128), req(1), 1, now);
+        let ready = b.push(route(512), req(2), 2, now);
+        assert!(ready.is_empty(), "different buckets must not co-flush");
+        let ready = b.push(route(128), req(3), 3, now);
+        assert_eq!(ready.len(), 1);
+        assert!(ready[0].requests.iter().all(|(r, _)| r.id != 2));
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(10),
+        });
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(route(128), req(1), 1, t0);
+        let dl = b.next_deadline().unwrap();
+        assert_eq!(dl, t0 + Duration::from_millis(10));
+    }
+
+    #[test]
+    fn flush_all_empties() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(route(if i % 2 == 0 { 128 } else { 512 }), req(i), i, now);
+        }
+        let batches = b.flush_all();
+        let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn prop_conservation_and_fifo() {
+        // Every pushed request comes out exactly once, and within a
+        // bucket, in FIFO order.
+        run(
+            Config::default().cases(128),
+            Gen::vec(Gen::usize_range(0, 3), 1, 64),
+            |bucket_choices| {
+                let buckets = [128usize, 256, 512, 1024];
+                let mut b = DynamicBatcher::new(BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_secs(60),
+                });
+                let now = Instant::now();
+                let mut flushed: Vec<PendingBatch> = Vec::new();
+                for (i, &choice) in bucket_choices.iter().enumerate() {
+                    flushed.extend(b.push(
+                        route(buckets[choice]),
+                        req(i as u64),
+                        i as u64,
+                        now,
+                    ));
+                }
+                flushed.extend(b.flush_all());
+                // conservation
+                let mut ids: Vec<u64> = flushed
+                    .iter()
+                    .flat_map(|batch| batch.requests.iter().map(|(r, _)| r.id))
+                    .collect();
+                ids.sort_unstable();
+                if ids != (0..bucket_choices.len() as u64).collect::<Vec<_>>() {
+                    return false;
+                }
+                // FIFO per bucket
+                let mut last_seen: std::collections::HashMap<usize, u64> = Default::default();
+                for batch in &flushed {
+                    for (r, _) in &batch.requests {
+                        if let Some(&prev) = last_seen.get(&batch.route.bucket) {
+                            if r.id <= prev {
+                                return false;
+                            }
+                        }
+                        last_seen.insert(batch.route.bucket, r.id);
+                    }
+                }
+                // batch size cap
+                flushed.iter().all(|b| b.requests.len() <= 4)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pending_counter_consistent() {
+        run(
+            Config::default().cases(64),
+            Gen::vec(Gen::usize_range(0, 1), 0, 40),
+            |choices| {
+                let mut b = DynamicBatcher::new(BatchPolicy {
+                    max_batch: 3,
+                    max_delay: Duration::from_secs(60),
+                });
+                let now = Instant::now();
+                let mut out = 0usize;
+                for (i, &c) in choices.iter().enumerate() {
+                    let batches =
+                        b.push(route(if c == 0 { 128 } else { 512 }), req(i as u64), 0, now);
+                    out += batches.iter().map(|x| x.requests.len()).sum::<usize>();
+                }
+                b.pending() + out == choices.len()
+            },
+        );
+    }
+}

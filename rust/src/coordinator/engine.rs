@@ -1,0 +1,619 @@
+//! The serving engine: one executor thread owning all PJRT state
+//! (client, compiled executables, parameter literals), fed through an
+//! mpsc channel. Routing and batching decisions happen on that thread;
+//! execution is serialized — the realistic model for a single device
+//! stream, and it sidesteps the xla crate's `!Send` raw-pointer types.
+//!
+//! The executor is pluggable ([`BatchExecutor`]): production uses
+//! [`RegistryExecutor`] over the AOT artifacts; tests inject mocks to
+//! exercise the full request lifecycle without artifacts.
+
+use crate::attention::selector::Selector;
+use crate::attention::AttentionVariant;
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse, RequestError};
+use crate::coordinator::router::{Route, Router};
+use crate::data::batch::Buckets;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Executes one padded batch; implementations own the device state.
+pub trait BatchExecutor {
+    /// `tokens` is a rectangular (b, bucket) matrix (already padded to a
+    /// supported batch size); returns one logits row per input row.
+    fn execute(&mut self, route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String>;
+
+    /// Batch sizes this executor supports, ascending (e.g. [1, 8]).
+    fn batch_sizes(&self) -> &[usize];
+
+    /// Token id used to pad rows/slots.
+    fn pad_id(&self) -> i32 {
+        0
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub buckets: Vec<usize>,
+    /// Per-head dimension of the served model (selector input).
+    pub head_dim: usize,
+    pub policy: BatchPolicy,
+    /// Backpressure: max requests in flight before rejecting.
+    pub queue_limit: usize,
+    /// Force one variant (None = adaptive selection — the default).
+    pub forced_variant: Option<AttentionVariant>,
+    /// Crossover policy (analytical N₀ by default; load a measured one
+    /// via `Selector::from_json_file` — see `examples/crossover_sweep`).
+    pub selector: Selector,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            buckets: vec![128, 256, 512, 1024],
+            head_dim: 16,
+            policy: BatchPolicy::default(),
+            queue_limit: 256,
+            forced_variant: None,
+            selector: Selector::analytical(),
+        }
+    }
+}
+
+enum Msg {
+    Infer(InferRequest, Sender<Result<InferResponse, RequestError>>),
+    Shutdown,
+}
+
+/// Handle to a running engine. Cloneable; shuts down when the last
+/// handle drops (via the explicit `shutdown` on Drop of the main one).
+pub struct Engine {
+    tx: Sender<Msg>,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicUsize>,
+    queue_limit: usize,
+    next_id: AtomicU64,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start with a custom executor (constructed ON the engine thread —
+    /// xla types are not Send).
+    pub fn start_with<F, E>(config: EngineConfig, make_executor: F) -> anyhow::Result<Self>
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let thread_metrics = Arc::clone(&metrics);
+        let thread_in_flight = Arc::clone(&in_flight);
+        let cfg = config.clone();
+        let worker = std::thread::Builder::new()
+            .name("ts-engine".into())
+            .spawn(move || {
+                let executor = match make_executor() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                engine_loop(cfg, executor, rx, thread_metrics, thread_in_flight);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow::anyhow!("executor init failed: {e}"))?;
+        Ok(Self {
+            tx,
+            metrics,
+            in_flight,
+            queue_limit: config.queue_limit,
+            next_id: AtomicU64::new(1),
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a request; the returned receiver yields the response.
+    pub fn submit(
+        &self,
+        tokens: Vec<i32>,
+    ) -> Result<Receiver<Result<InferResponse, RequestError>>, RequestError> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let current = self.in_flight.load(Ordering::Relaxed);
+        if current >= self.queue_limit {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(RequestError::Overloaded {
+                queued: current,
+                limit: self.queue_limit,
+            });
+        }
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        let req = InferRequest::new(id, tokens);
+        self.tx
+            .send(Msg::Infer(req, resp_tx))
+            .map_err(|_| RequestError::Shutdown)?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<InferResponse, RequestError> {
+        let rx = self.submit(tokens)?;
+        rx.recv().map_err(|_| RequestError::Shutdown)?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+type Responder = Sender<Result<InferResponse, RequestError>>;
+
+fn engine_loop<E: BatchExecutor>(
+    config: EngineConfig,
+    mut executor: E,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicUsize>,
+) {
+    let mut router = Router::new(
+        Buckets::new(config.buckets.clone()),
+        config.selector.clone(),
+        config.head_dim,
+    );
+    if let Some(v) = config.forced_variant {
+        router = router.with_forced_variant(v);
+    }
+    let mut batcher = DynamicBatcher::new(config.policy);
+    // ResponderId → waiting channel. Ids are request ids.
+    let mut waiters: std::collections::HashMap<u64, Responder> = Default::default();
+
+    const IDLE: Duration = Duration::from_millis(50);
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(IDLE);
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(req, responder)) => {
+                match router.route(req.tokens.len()) {
+                    Ok(route) => {
+                        let id = req.id;
+                        waiters.insert(id, responder);
+                        let ready = batcher.push(route, req, id, Instant::now());
+                        for batch in ready {
+                            run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+                        }
+                    }
+                    Err(e) => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        in_flight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = responder.send(Err(e));
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        for batch in batcher.flush_due(Instant::now()) {
+            run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+        }
+    }
+    // Drain on shutdown: execute what's queued so no request hangs.
+    for batch in batcher.flush_all() {
+        run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+    }
+    for (_, responder) in waiters.drain() {
+        let _ = responder.send(Err(RequestError::Shutdown));
+    }
+}
+
+fn run_batch<E: BatchExecutor>(
+    executor: &mut E,
+    batch: PendingBatch,
+    waiters: &mut std::collections::HashMap<u64, Responder>,
+    metrics: &Metrics,
+    in_flight: &AtomicUsize,
+) {
+    let k = batch.requests.len();
+    debug_assert!(k > 0);
+    let route = batch.route;
+    // Smallest supported executable batch that fits all k requests
+    // (max_batch policy should match the largest artifact batch).
+    let exec_b = executor
+        .batch_sizes()
+        .iter()
+        .copied()
+        .find(|&b| b >= k)
+        .unwrap_or_else(|| *executor.batch_sizes().last().unwrap());
+    let pad_id = executor.pad_id();
+
+    // Assemble the padded token matrix.
+    let mut tokens: Vec<Vec<i32>> = Vec::with_capacity(exec_b);
+    for (req, _) in &batch.requests {
+        tokens.push(crate::data::batch::fit_length(
+            &req.tokens,
+            route.bucket,
+            pad_id,
+        ));
+    }
+    while tokens.len() < exec_b {
+        tokens.push(vec![pad_id; route.bucket]); // padding slots
+    }
+    metrics
+        .padding_rows
+        .fetch_add((exec_b - k) as u64, Ordering::Relaxed);
+
+    let t_exec = Instant::now();
+    let result = executor.execute(route, &tokens);
+    let exec_time = t_exec.elapsed();
+    metrics.exec_time.record(exec_time);
+    metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_requests
+        .fetch_add(k as u64, Ordering::Relaxed);
+
+    match result {
+        Ok(logits_rows) => {
+            for (i, (req, responder_id)) in batch.requests.into_iter().enumerate() {
+                let latency = req.enqueued_at.elapsed();
+                metrics.latency.record(latency);
+                metrics
+                    .queue_wait
+                    .record(latency.saturating_sub(exec_time));
+                metrics.record_variant(route.variant);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                if let Some(responder) = waiters.remove(&responder_id) {
+                    let _ = responder.send(Ok(InferResponse {
+                        id: req.id,
+                        logits: logits_rows.get(i).cloned().unwrap_or_default(),
+                        variant: route.variant,
+                        bucket: route.bucket,
+                        batch_size: k,
+                        latency,
+                    }));
+                }
+            }
+        }
+        Err(e) => {
+            for (_, responder_id) in batch.requests {
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                if let Some(responder) = waiters.remove(&responder_id) {
+                    let _ = responder.send(Err(RequestError::ExecFailed(e.clone())));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Production executor over the AOT registry
+// ---------------------------------------------------------------------------
+
+/// Executes batches through the AOT serving artifacts
+/// (`serve_{variant}_infer_b{B}_n{N}`), with parameter literals
+/// converted once and shared across executables.
+pub struct RegistryExecutor {
+    registry: crate::runtime::Registry,
+    prefix: String,
+    batch_sizes: Vec<usize>,
+    /// Parameter literals (identical across serve artifacts by
+    /// construction — same seed, shape-independent init).
+    params: Vec<xla::Literal>,
+}
+
+impl RegistryExecutor {
+    pub fn new(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        prefix: &str,
+        buckets: &[usize],
+        batch_sizes: &[usize],
+    ) -> anyhow::Result<Self> {
+        let runtime = crate::runtime::Runtime::cpu()?;
+        let registry = crate::runtime::Registry::open(runtime, artifacts_dir)?;
+        // Preload every (variant, bucket, batch) executable now so the
+        // request path never pays compile latency.
+        for variant in ["direct", "efficient"] {
+            for &n in buckets {
+                for &b in batch_sizes {
+                    let name = format!("{prefix}_{variant}_infer_b{b}_n{n}");
+                    registry.load(&name)?;
+                }
+            }
+        }
+        let param_src = format!(
+            "{prefix}_efficient_infer_b{}_n{}",
+            batch_sizes[0], buckets[0]
+        );
+        let params = registry
+            .load_params(&param_src)?
+            .iter()
+            .map(|t| crate::runtime::literal::tensor_to_literal(t))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            registry,
+            prefix: prefix.to_string(),
+            batch_sizes: batch_sizes.to_vec(),
+            params,
+        })
+    }
+
+    fn artifact_name(&self, route: Route, b: usize) -> String {
+        format!(
+            "{}_{}_infer_b{}_n{}",
+            self.prefix,
+            route.variant.name(),
+            b,
+            route.bucket
+        )
+    }
+}
+
+impl BatchExecutor for RegistryExecutor {
+    fn execute(&mut self, route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        let name = self.artifact_name(route, tokens.len());
+        let exe = self.registry.load(&name).map_err(|e| e.to_string())?;
+        // §Perf L3: parameters are passed by reference — `execute` takes
+        // `Borrow<Literal>`, so the ~N_params × size copy that an owned
+        // input vector would cost never happens (see EXPERIMENTS.md).
+        let tokens_lit =
+            crate::runtime::literal::tokens_to_literal(tokens).map_err(|e| e.to_string())?;
+        let inputs: Vec<&xla::Literal> = self
+            .params
+            .iter()
+            .chain(std::iter::once(&tokens_lit))
+            .collect();
+        let outputs = exe.run(&inputs).map_err(|e| e.to_string())?;
+        let logits =
+            crate::runtime::literal::literal_to_tensor(&outputs[0]).map_err(|e| e.to_string())?;
+        let (b, c) = (logits.shape()[0], logits.shape()[1]);
+        Ok((0..b)
+            .map(|i| logits.data()[i * c..(i + 1) * c].to_vec())
+            .collect())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+}
+
+/// Deep-copy a literal (shape + raw bytes).
+pub fn clone_literal(lit: &xla::Literal) -> anyhow::Result<xla::Literal> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = lit.to_vec::<f32>()?;
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock executor: logits = [sum of tokens, bucket, batch index, variant].
+    struct MockExecutor {
+        batch_sizes: Vec<usize>,
+        fail: bool,
+        delay: Duration,
+        executed_batches: Arc<AtomicUsize>,
+    }
+
+    impl BatchExecutor for MockExecutor {
+        fn execute(
+            &mut self,
+            route: Route,
+            tokens: &[Vec<i32>],
+        ) -> Result<Vec<Vec<f32>>, String> {
+            if self.fail {
+                return Err("mock failure".into());
+            }
+            std::thread::sleep(self.delay);
+            self.executed_batches.fetch_add(1, Ordering::Relaxed);
+            Ok(tokens
+                .iter()
+                .map(|row| {
+                    vec![
+                        row.iter().sum::<i32>() as f32,
+                        route.bucket as f32,
+                        match route.variant {
+                            AttentionVariant::Direct => 0.0,
+                            AttentionVariant::Efficient => 1.0,
+                            AttentionVariant::Softmax => 2.0,
+                        },
+                    ]
+                })
+                .collect())
+        }
+
+        fn batch_sizes(&self) -> &[usize] {
+            &self.batch_sizes
+        }
+    }
+
+    fn mock_engine(config: EngineConfig) -> (Engine, Arc<AtomicUsize>) {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let engine = Engine::start_with(config, move || {
+            Ok(MockExecutor {
+                batch_sizes: vec![1, 8],
+                fail: false,
+                delay: Duration::ZERO,
+                executed_batches: c2,
+            })
+        })
+        .unwrap();
+        (engine, counter)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (engine, _) = mock_engine(EngineConfig::default());
+        let resp = engine.infer(vec![1, 2, 3]).unwrap();
+        assert_eq!(resp.logits[0], 6.0);
+        assert_eq!(resp.bucket, 128);
+        assert_eq!(resp.variant, AttentionVariant::Direct); // 128 < N0(16)
+        assert_eq!(engine.in_flight(), 0);
+    }
+
+    #[test]
+    fn long_sequence_routes_efficient() {
+        let (engine, _) = mock_engine(EngineConfig::default());
+        let resp = engine.infer(vec![1; 700]).unwrap();
+        assert_eq!(resp.bucket, 1024);
+        assert_eq!(resp.variant, AttentionVariant::Efficient);
+    }
+
+    #[test]
+    fn too_long_rejected() {
+        let (engine, _) = mock_engine(EngineConfig::default());
+        let err = engine.infer(vec![1; 5000]).unwrap_err();
+        assert!(matches!(err, RequestError::TooLong { .. }));
+    }
+
+    #[test]
+    fn batches_aggregate_concurrent_requests() {
+        let (engine, executed) = mock_engine(EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(30),
+            },
+            ..Default::default()
+        });
+        // Fire 8 same-bucket requests; they should coalesce into one
+        // batch once max_batch is hit.
+        let rxs: Vec<_> = (0..8)
+            .map(|i| engine.submit(vec![i as i32; 100]).unwrap())
+            .collect();
+        let responses: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        assert!(responses.iter().all(|r| r.bucket == 128));
+        assert_eq!(responses.iter().map(|r| r.batch_size).max(), Some(8));
+        assert_eq!(executed.load(Ordering::Relaxed), 1, "one fused batch");
+    }
+
+    #[test]
+    fn delay_flush_for_lone_request() {
+        let (engine, _) = mock_engine(EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(10),
+            },
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let resp = engine.infer(vec![1, 2]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(9), "waited for delay");
+        assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn failure_propagates_to_all_requests() {
+        let engine = Engine::start_with(EngineConfig::default(), move || {
+            Ok(MockExecutor {
+                batch_sizes: vec![1, 8],
+                fail: true,
+                delay: Duration::ZERO,
+                executed_batches: Arc::new(AtomicUsize::new(0)),
+            })
+        })
+        .unwrap();
+        let err = engine.infer(vec![1, 2, 3]).unwrap_err();
+        assert!(matches!(err, RequestError::ExecFailed(_)));
+        assert_eq!(engine.in_flight(), 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_above_limit() {
+        let (engine, _) = mock_engine(EngineConfig {
+            queue_limit: 4,
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_delay: Duration::from_millis(200),
+            },
+            ..Default::default()
+        });
+        let mut oks = 0;
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            match engine.submit(vec![i; 10]) {
+                Ok(rx) => {
+                    oks += 1;
+                    rxs.push(rx);
+                }
+                Err(RequestError::Overloaded { .. }) => rejected += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected > 0, "expected overload rejections");
+        assert!(oks >= 4);
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn forced_variant_respected() {
+        let (engine, _) = mock_engine(EngineConfig {
+            forced_variant: Some(AttentionVariant::Efficient),
+            ..Default::default()
+        });
+        let resp = engine.infer(vec![1; 10]).unwrap();
+        assert_eq!(resp.variant, AttentionVariant::Efficient);
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let (engine, _) = mock_engine(EngineConfig::default());
+        for _ in 0..5 {
+            engine.infer(vec![1; 50]).unwrap();
+        }
+        let m = engine.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 5);
+        assert!(m.latency.count() == 5);
+        assert!(m.summary().contains("completed=5"));
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let (engine, _) = mock_engine(EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_delay: Duration::from_secs(10), // won't flush by time
+            },
+            ..Default::default()
+        });
+        let rx = engine.submit(vec![1, 2, 3]).unwrap();
+        drop(engine); // shutdown must flush, not orphan
+        let result = rx.recv().unwrap();
+        assert!(result.is_ok(), "drained on shutdown: {result:?}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Serving metrics: counters and log-scale latency histograms,
+//! lock-free on the hot path (atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram from 1 µs to ~1 hour.
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i µs, 2^(i+1) µs).
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 32;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Approximate quantile from the log₂ buckets (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << HIST_BUCKETS)
+    }
+}
+
+/// All engine metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches_executed: AtomicU64,
+    /// Sum of real requests across executed batches (for mean occupancy).
+    pub batched_requests: AtomicU64,
+    /// Padding rows executed (batch-slot waste).
+    pub padding_rows: AtomicU64,
+    /// End-to-end latency.
+    pub latency: LatencyHistogram,
+    /// Time spent waiting in the batcher.
+    pub queue_wait: LatencyHistogram,
+    /// Pure executable runtime.
+    pub exec_time: LatencyHistogram,
+    /// Per-variant request counts [direct, efficient, softmax].
+    pub variant_counts: [AtomicU64; 3],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_variant(&self, v: crate::attention::AttentionVariant) {
+        let idx = match v {
+            crate::attention::AttentionVariant::Direct => 0,
+            crate::attention::AttentionVariant::Efficient => 1,
+            crate::attention::AttentionVariant::Softmax => 2,
+        };
+        self.variant_counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let batches = self.batches_executed.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests: submitted={} completed={} rejected={}\n\
+             batches: executed={} mean_occupancy={:.2} padding_rows={}\n\
+             variants: direct={} efficient={} softmax={}\n\
+             latency: mean={:?} p50={:?} p99={:?}\n\
+             queue_wait: mean={:?} p99={:?}\n\
+             exec: mean={:?} p99={:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches_executed.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.padding_rows.load(Ordering::Relaxed),
+            self.variant_counts[0].load(Ordering::Relaxed),
+            self.variant_counts[1].load(Ordering::Relaxed),
+            self.variant_counts[2].load(Ordering::Relaxed),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.queue_wait.mean(),
+            self.queue_wait.quantile(0.99),
+            self.exec_time.mean(),
+            self.exec_time.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.quantile(0.5) <= Duration::from_millis(16));
+        assert!(h.quantile(1.0) >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let m = Metrics::new();
+        m.batches_executed.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert!((m.mean_batch_occupancy() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let m = Metrics::new();
+        m.submitted.store(17, Ordering::Relaxed);
+        m.record_variant(crate::attention::AttentionVariant::Efficient);
+        let s = m.summary();
+        assert!(s.contains("submitted=17"));
+        assert!(s.contains("efficient=1"));
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the system contribution wrapped around the
+//! paper's mechanism.
+//!
+//! Request path (python nowhere in sight):
+//!
+//! ```text
+//! client ──submit──▶ [router: length bucket + variant selection]
+//!        ──enqueue─▶ [dynamic batcher: per-(bucket) queues,
+//!                     flush on max_batch or max_delay]
+//!        ──execute─▶ [engine thread: PJRT executable for
+//!                     (variant, bucket, batch-size)]
+//!        ──reply───▶ per-request channel
+//! ```
+//!
+//! The **variant selection** is the paper's "(and Back)": direct
+//! `O(N²d)` for buckets below the crossover N₀(d), efficient `O(Nd³)`
+//! above it (`attention::selector`). Because both variants compute the
+//! same function with the same parameters, the router can switch per
+//! bucket with zero accuracy cost — Section 6's closing argument,
+//! realized as a scheduling policy.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse, RequestError};
+pub use router::{Route, Router};

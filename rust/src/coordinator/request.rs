@@ -1,0 +1,105 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// A classification request: one token sequence.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued_at: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Self {
+        Self {
+            id,
+            tokens,
+            enqueued_at: Instant::now(),
+        }
+    }
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Class logits.
+    pub logits: Vec<f32>,
+    /// Which attention variant served this request.
+    pub variant: crate::attention::AttentionVariant,
+    /// Bucket (padded sequence length) used.
+    pub bucket: usize,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+    /// Total latency: submit → response.
+    pub latency: std::time::Duration,
+}
+
+impl InferResponse {
+    pub fn predicted_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Why a request was rejected or failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// Longer than the largest configured bucket.
+    TooLong { len: usize, max: usize },
+    /// Queue full (backpressure).
+    Overloaded { queued: usize, limit: usize },
+    /// Empty token sequence.
+    Empty,
+    /// Engine shut down before the request completed.
+    Shutdown,
+    /// PJRT execution failed.
+    ExecFailed(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TooLong { len, max } => write!(f, "sequence too long: {len} > max bucket {max}"),
+            Self::Overloaded { queued, limit } => {
+                write!(f, "engine overloaded: {queued} queued (limit {limit})")
+            }
+            Self::Empty => write!(f, "empty token sequence"),
+            Self::Shutdown => write!(f, "engine shut down"),
+            Self::ExecFailed(e) => write!(f, "execution failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicted_class_is_argmax() {
+        let r = InferResponse {
+            id: 1,
+            logits: vec![0.1, 2.0, -1.0],
+            variant: crate::attention::AttentionVariant::Direct,
+            bucket: 128,
+            batch_size: 1,
+            latency: std::time::Duration::from_millis(1),
+        };
+        assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn errors_display() {
+        let e = RequestError::TooLong { len: 5000, max: 1024 };
+        assert!(e.to_string().contains("5000"));
+        let e = RequestError::Overloaded { queued: 100, limit: 64 };
+        assert!(e.to_string().contains("overloaded"));
+    }
+}

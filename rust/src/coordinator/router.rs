@@ -1,0 +1,157 @@
+//! Request router: length → bucket, bucket → attention variant.
+//!
+//! The variant decision implements the paper's "(and Back)" with the
+//! crossover machinery from `attention::selector`; admission control
+//! rejects sequences beyond the largest bucket up front so they never
+//! consume queue space.
+
+use crate::attention::selector::Selector;
+use crate::attention::AttentionVariant;
+use crate::coordinator::request::RequestError;
+use crate::data::batch::Buckets;
+
+/// Routing decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    /// Padded sequence length (one of the configured buckets).
+    pub bucket: usize,
+    /// Attention implementation to use for this bucket.
+    pub variant: AttentionVariant,
+}
+
+/// Length-bucket router with a pluggable variant policy.
+#[derive(Clone, Debug)]
+pub struct Router {
+    buckets: Buckets,
+    selector: Selector,
+    /// Per-head dimension of the served model (d = d_emb / h).
+    head_dim: usize,
+    /// Force a fixed variant (overrides the selector) — used by benches
+    /// and the ablation examples.
+    forced: Option<AttentionVariant>,
+}
+
+impl Router {
+    pub fn new(buckets: Buckets, selector: Selector, head_dim: usize) -> Self {
+        Self {
+            buckets,
+            selector,
+            head_dim,
+            forced: None,
+        }
+    }
+
+    /// Force every request onto one variant.
+    pub fn with_forced_variant(mut self, v: AttentionVariant) -> Self {
+        self.forced = Some(v);
+        self
+    }
+
+    pub fn buckets(&self) -> &Buckets {
+        &self.buckets
+    }
+
+    /// Route a request by raw sequence length.
+    pub fn route(&self, len: usize) -> Result<Route, RequestError> {
+        if len == 0 {
+            return Err(RequestError::Empty);
+        }
+        let bucket = self
+            .buckets
+            .select(len)
+            .ok_or(RequestError::TooLong {
+                len,
+                max: self.buckets.largest(),
+            })?;
+        let variant = self
+            .forced
+            .unwrap_or_else(|| self.selector.select(bucket, self.head_dim));
+        Ok(Route { bucket, variant })
+    }
+
+    /// The crossover length the router is operating with (diagnostics).
+    pub fn crossover(&self) -> f64 {
+        self.selector.crossover(self.head_dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{run, Config, Gen};
+
+    fn router() -> Router {
+        // d=16 → N0 ≈ 271: buckets 128/256 → direct, 512/1024 → efficient.
+        Router::new(
+            Buckets::new(vec![128, 256, 512, 1024]),
+            Selector::analytical(),
+            16,
+        )
+    }
+
+    #[test]
+    fn routes_short_to_direct_long_to_efficient() {
+        let r = router();
+        assert_eq!(
+            r.route(100).unwrap(),
+            Route { bucket: 128, variant: AttentionVariant::Direct }
+        );
+        assert_eq!(
+            r.route(256).unwrap(),
+            Route { bucket: 256, variant: AttentionVariant::Direct }
+        );
+        assert_eq!(
+            r.route(300).unwrap(),
+            Route { bucket: 512, variant: AttentionVariant::Efficient }
+        );
+        assert_eq!(
+            r.route(1000).unwrap(),
+            Route { bucket: 1024, variant: AttentionVariant::Efficient }
+        );
+    }
+
+    #[test]
+    fn rejects_empty_and_too_long() {
+        let r = router();
+        assert_eq!(r.route(0), Err(RequestError::Empty));
+        assert_eq!(
+            r.route(2000),
+            Err(RequestError::TooLong { len: 2000, max: 1024 })
+        );
+    }
+
+    #[test]
+    fn forced_variant_overrides() {
+        let r = router().with_forced_variant(AttentionVariant::Efficient);
+        assert_eq!(r.route(10).unwrap().variant, AttentionVariant::Efficient);
+    }
+
+    #[test]
+    fn prop_bucket_fits_and_variant_monotone() {
+        let r = router();
+        run(
+            Config::default().cases(256),
+            Gen::usize_range(1, 1024),
+            move |&len| {
+                let route = r.route(len).unwrap();
+                // bucket fits
+                if route.bucket < len {
+                    return false;
+                }
+                // variant is monotone in bucket: if efficient at this
+                // bucket, all larger buckets are efficient too.
+                if route.variant == AttentionVariant::Efficient {
+                    r.buckets()
+                        .sizes()
+                        .iter()
+                        .filter(|&&b| b > route.bucket)
+                        .all(|&b| {
+                            r.route(b).unwrap().variant == AttentionVariant::Efficient
+                        })
+                } else {
+                    true
+                }
+            },
+        );
+    }
+}

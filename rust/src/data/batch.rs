@@ -1,0 +1,151 @@
+//! Batch assembly: padding, truncation, length bucketing.
+//!
+//! Shared by the trainer (fixed-shape batches for the train-step
+//! executables) and the serving coordinator (bucket selection for
+//! variable-length requests).
+
+use super::{Example, TaskGenerator};
+use crate::util::rng::Pcg64;
+
+/// A model-ready rectangular batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// (B, N) row-major token ids.
+    pub tokens: Vec<Vec<i32>>,
+    pub labels: Vec<i32>,
+    pub seq_len: usize,
+}
+
+impl Batch {
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Pad (with `pad_id`) or truncate a token sequence to exactly `n`.
+pub fn fit_length(tokens: &[i32], n: usize, pad_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    out.extend(tokens.iter().take(n).copied());
+    out.resize(n, pad_id);
+    out
+}
+
+/// Assemble a batch of examples at fixed length `n`.
+pub fn collate(examples: &[Example], n: usize, pad_id: i32) -> Batch {
+    Batch {
+        tokens: examples
+            .iter()
+            .map(|e| fit_length(&e.tokens, n, pad_id))
+            .collect(),
+        labels: examples.iter().map(|e| e.label).collect(),
+        seq_len: n,
+    }
+}
+
+/// Generate a fresh batch from a task generator.
+pub fn generate_batch<G: TaskGenerator>(
+    gen: &G,
+    rng: &mut Pcg64,
+    batch: usize,
+    n: usize,
+) -> Batch {
+    let examples: Vec<Example> = (0..batch).map(|_| gen.generate(rng)).collect();
+    collate(&examples, n, gen.pad_id())
+}
+
+/// Length buckets for the serving path: the smallest configured bucket
+/// that fits, or `None` if the sequence exceeds the largest bucket.
+#[derive(Clone, Debug)]
+pub struct Buckets {
+    sizes: Vec<usize>,
+}
+
+impl Buckets {
+    pub fn new(mut sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty(), "need at least one bucket");
+        sizes.sort_unstable();
+        sizes.dedup();
+        Self { sizes }
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn largest(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Smallest bucket >= len.
+    pub fn select(&self, len: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&b| b >= len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::listops::ListOpsGen;
+    use crate::testing::prop::{pair, run, Config, Gen};
+
+    #[test]
+    fn fit_length_pads_and_truncates() {
+        assert_eq!(fit_length(&[1, 2, 3], 5, 0), vec![1, 2, 3, 0, 0]);
+        assert_eq!(fit_length(&[1, 2, 3, 4, 5, 6], 4, 0), vec![1, 2, 3, 4]);
+        assert_eq!(fit_length(&[], 3, 9), vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn collate_is_rectangular() {
+        let g = ListOpsGen { min_len: 8, max_len: 60, ..Default::default() };
+        let mut rng = Pcg64::new(1);
+        let b = generate_batch(&g, &mut rng, 7, 64);
+        assert_eq!(b.size(), 7);
+        assert_eq!(b.labels.len(), 7);
+        assert!(b.tokens.iter().all(|row| row.len() == 64));
+    }
+
+    #[test]
+    fn buckets_select_smallest_fit() {
+        let b = Buckets::new(vec![512, 128, 256, 1024]);
+        assert_eq!(b.select(1), Some(128));
+        assert_eq!(b.select(128), Some(128));
+        assert_eq!(b.select(129), Some(256));
+        assert_eq!(b.select(1024), Some(1024));
+        assert_eq!(b.select(1025), None);
+        assert_eq!(b.largest(), 1024);
+    }
+
+    #[test]
+    fn prop_bucket_is_tight() {
+        // Selected bucket fits, and no smaller configured bucket does.
+        let buckets = Buckets::new(vec![64, 128, 256, 512]);
+        run(
+            Config::default().cases(256),
+            Gen::usize_range(1, 600),
+            move |&len| match buckets.select(len) {
+                Some(b) => {
+                    b >= len && buckets.sizes().iter().all(|&s| s >= b || s < len)
+                }
+                None => len > buckets.largest(),
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fit_length_exact() {
+        run(
+            Config::default().cases(128),
+            pair(Gen::usize_range(0, 300), Gen::usize_range(1, 300)),
+            |&(src_len, n)| {
+                let tokens: Vec<i32> = (0..src_len as i32).collect();
+                let fitted = fit_length(&tokens, n, -1);
+                fitted.len() == n
+                    && fitted
+                        .iter()
+                        .enumerate()
+                        .all(|(i, &t)| if i < src_len.min(n) { t == i as i32 } else { t == -1 })
+            },
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Data substrates (built from scratch — DESIGN.md §5 substitutions):
+//!
+//! * [`listops`] — a faithful Long ListOps generator + exact evaluator
+//!   (the real LRA task, procedurally generated like the original);
+//! * [`pixel`] — synthetic grayscale shape images serialized to pixel
+//!   sequences (CIFAR10-pixel stand-in);
+//! * [`textbytes`] — synthetic byte-level text classification
+//!   (IMDB-Byte stand-in);
+//! * [`batch`] — batch assembly, padding, and length bucketing shared
+//!   by the trainer and the serving coordinator.
+
+pub mod batch;
+pub mod listops;
+pub mod pixel;
+pub mod textbytes;
+
+/// A labelled token sequence (model-ready).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// Common interface for the three task generators.
+pub trait TaskGenerator {
+    /// Vocabulary size (token ids are `0..vocab`).
+    fn vocab(&self) -> usize;
+    /// Number of classes.
+    fn classes(&self) -> usize;
+    /// Generate one example with unpadded natural length.
+    fn generate(&self, rng: &mut crate::util::rng::Pcg64) -> Example;
+    /// Padding token id.
+    fn pad_id(&self) -> i32 {
+        0
+    }
+}
+
+impl TaskGenerator for Box<dyn TaskGenerator> {
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+    fn classes(&self) -> usize {
+        (**self).classes()
+    }
+    fn generate(&self, rng: &mut crate::util::rng::Pcg64) -> Example {
+        (**self).generate(rng)
+    }
+    fn pad_id(&self) -> i32 {
+        (**self).pad_id()
+    }
+}
+
+/// Generator for a named task, tuned to a model's sequence length
+/// (matches the AOT config registry in `python/compile/aot.py`).
+pub fn task_by_name(task: &str, seq_len: usize) -> Option<Box<dyn TaskGenerator>> {
+    match task {
+        "listops" => Some(Box::new(listops::ListOpsGen {
+            min_len: 16,
+            max_len: seq_len.saturating_sub(8).max(24),
+            ..Default::default()
+        })),
+        "pixel" => Some(Box::new(pixel::PixelGen {
+            side: (seq_len as f64).sqrt() as usize,
+            ..Default::default()
+        })),
+        "textbytes" => Some(Box::new(textbytes::TextBytesGen {
+            seq_len,
+            ..Default::default()
+        })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod factory_tests {
+    use super::*;
+
+    #[test]
+    fn factory_produces_matching_generators() {
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        for (task, n, vocab, classes) in [
+            ("listops", 256, 18, 10),
+            ("pixel", 256, 256, 4),
+            ("textbytes", 512, 256, 2),
+        ] {
+            let g = task_by_name(task, n).unwrap();
+            assert_eq!(g.vocab(), vocab, "{task}");
+            assert_eq!(g.classes(), classes, "{task}");
+            let ex = g.generate(&mut rng);
+            assert!(ex.tokens.len() <= n, "{task}: {} > {n}", ex.tokens.len());
+            assert!((ex.label as usize) < classes);
+        }
+        assert!(task_by_name("nope", 128).is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Synthetic byte-level text classification — the IMDB-Byte substitute
+//! (DESIGN.md §5).
+//!
+//! IMDB-Byte classifies movie-review sentiment from raw bytes at
+//! N=4000. We preserve the regime — byte-level vocabulary (256),
+//! long cut/padded sequences, class signal spread across the whole
+//! document — with a two-class stochastic grammar: each class has its
+//! own word distribution (distinct stems and function-word mixture) so
+//! the classifier must integrate weak evidence over many tokens rather
+//! than key on one marker.
+
+use super::{Example, TaskGenerator};
+use crate::util::rng::Pcg64;
+
+const CLASS_A_STEMS: [&str; 12] = [
+    "lumin", "brill", "superb", "delight", "charm", "master", "vivid", "tender", "crisp",
+    "elegant", "radiant", "sincere",
+];
+const CLASS_B_STEMS: [&str; 12] = [
+    "dismal", "tediou", "clumsy", "dreary", "shallow", "murky", "stale", "wooden", "leaden",
+    "garish", "listless", "hollow",
+];
+const NEUTRAL: [&str; 16] = [
+    "the", "a", "of", "and", "to", "in", "it", "was", "film", "scene", "plot", "actor", "story",
+    "with", "for", "that",
+];
+const SUFFIXES: [&str; 6] = ["", "ly", "ing", "ed", "ous", "ness"];
+
+#[derive(Clone, Debug)]
+pub struct TextBytesGen {
+    /// Target byte length (sequences are cut/padded to this, mirroring
+    /// the LRA pipeline).
+    pub seq_len: usize,
+    /// Fraction of words drawn from the class-specific stem pool.
+    pub signal_rate: f64,
+}
+
+impl Default for TextBytesGen {
+    fn default() -> Self {
+        Self { seq_len: 512, signal_rate: 0.18 }
+    }
+}
+
+impl TextBytesGen {
+    /// Produce the raw text of one document.
+    pub fn document(&self, rng: &mut Pcg64, class: usize) -> String {
+        let stems: &[&str] = if class == 0 { &CLASS_A_STEMS } else { &CLASS_B_STEMS };
+        let mut text = String::with_capacity(self.seq_len + 16);
+        while text.len() < self.seq_len + 8 {
+            let word = if rng.bernoulli(self.signal_rate) {
+                format!("{}{}", rng.choice(stems), rng.choice(&SUFFIXES))
+            } else {
+                rng.choice(&NEUTRAL).to_string()
+            };
+            text.push_str(&word);
+            // Occasional punctuation, otherwise space.
+            if rng.bernoulli(0.06) {
+                text.push_str(". ");
+            } else {
+                text.push(' ');
+            }
+        }
+        text
+    }
+}
+
+impl TaskGenerator for TextBytesGen {
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn generate(&self, rng: &mut Pcg64) -> Example {
+        let class = rng.next_below(2) as usize;
+        let text = self.document(rng, class);
+        let mut tokens: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        tokens.truncate(self.seq_len); // cut (padding happens in batch.rs)
+        Example { tokens, label: class as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_range_and_length() {
+        let g = TextBytesGen::default();
+        let mut rng = Pcg64::new(1);
+        let ex = g.generate(&mut rng);
+        assert_eq!(ex.tokens.len(), 512);
+        assert!(ex.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn classes_have_distinct_vocabulary() {
+        let g = TextBytesGen::default();
+        let mut rng = Pcg64::new(2);
+        let doc_a = g.document(&mut rng, 0);
+        let doc_b = g.document(&mut rng, 1);
+        let has_a = CLASS_A_STEMS.iter().any(|s| doc_a.contains(s));
+        let has_b_in_a = CLASS_B_STEMS.iter().any(|s| doc_a.contains(s));
+        assert!(has_a && !has_b_in_a);
+        assert!(CLASS_B_STEMS.iter().any(|s| doc_b.contains(s)));
+    }
+
+    #[test]
+    fn signal_is_distributed_not_localized() {
+        // Split a doc in half: both halves should carry class stems, so
+        // the classifier can't shortcut on a prefix.
+        let g = TextBytesGen { seq_len: 1024, signal_rate: 0.18 };
+        let mut rng = Pcg64::new(3);
+        let doc = g.document(&mut rng, 0);
+        let mid = doc.len() / 2;
+        let first = &doc[..mid];
+        let second = &doc[mid..];
+        assert!(CLASS_A_STEMS.iter().any(|s| first.contains(s)));
+        assert!(CLASS_A_STEMS.iter().any(|s| second.contains(s)));
+    }
+
+    #[test]
+    fn both_labels_occur() {
+        let g = TextBytesGen::default();
+        let mut rng = Pcg64::new(4);
+        let labels: Vec<i32> = (0..40).map(|_| g.generate(&mut rng).label).collect();
+        assert!(labels.contains(&0) && labels.contains(&1));
+    }
+}

@@ -1,0 +1,60 @@
+//! # TaylorShift
+//!
+//! A full-stack reproduction of *TaylorShift: Shifting the Complexity of
+//! Self-Attention from Squared to Linear (and Back) using Taylor-Softmax*
+//! (Nauen, Palacio, Dengel, 2024).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! - **L1** — Pallas kernels (`python/compile/kernels/`) implementing
+//!   direct- and efficient-TaylorShift plus a softmax baseline, verified
+//!   against a pure-jnp oracle.
+//! - **L2** — a JAX transformer encoder (`python/compile/model.py`) whose
+//!   forward/backward graphs are AOT-lowered to HLO text once at build
+//!   time (`make artifacts`).
+//! - **L3** — this crate: a PJRT runtime that loads those artifacts, an
+//!   `XlaBuilder`-based attention emitter for runtime shape
+//!   specialization, a serving coordinator (router → dynamic batcher →
+//!   engine) whose *variant selector* implements the paper's "(and
+//!   Back)": pick direct `O(N²d)` vs efficient `O(Nd³)` per sequence
+//!   length from the analytical/calibrated crossover points, a training
+//!   driver, the paper's analytical cost models (Eqs. 5–12), and all data
+//!   substrates (ListOps generator/evaluator, synthetic pixel & byte-text
+//!   tasks).
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use taylorshift::attention::{self, AttentionVariant};
+//! use taylorshift::tensor::Tensor;
+//!
+//! let (n, d) = (128, 16);
+//! let q = Tensor::randn(&[n, d], 1);
+//! let k = Tensor::randn(&[n, d], 2);
+//! let v = Tensor::randn(&[n, d], 3);
+//! // Both implementations compute the same function:
+//! let y_dir = attention::direct::taylor_direct(&q, &k, &v, 1.0, true);
+//! let y_eff = attention::efficient::taylor_efficient(&q, &k, &v, 1.0);
+//! assert!(y_dir.allclose(&y_eff, 1e-4, 1e-4));
+//! // The selector picks the cheaper one for a given (N, d):
+//! let variant = attention::selector::Selector::analytical().select(n, d);
+//! assert_eq!(variant, AttentionVariant::Direct); // N < N0(16)
+//! ```
+
+pub mod analysis;
+pub mod attention;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+pub use attention::AttentionVariant;
+pub use tensor::Tensor;

@@ -1,0 +1,280 @@
+//! TaylorShift CLI — leader entrypoint for the L3 coordinator.
+//!
+//! Subcommands:
+//!   serve     — start the inference engine and run a synthetic client load
+//!   train     — run a training loop over an AOT train-step artifact
+//!   analyze   — print the paper's analytical tables (Table 2, head scaling)
+//!   artifacts — list the artifact registry
+//!
+//! See README for recipes.
+
+use taylorshift::analysis::{mhsa, transitions};
+use taylorshift::bench_support::Table;
+use taylorshift::config::ServerConfig;
+use taylorshift::coordinator::engine::{Engine, RegistryExecutor};
+use taylorshift::data::listops::ListOpsGen;
+use taylorshift::data::TaskGenerator;
+use taylorshift::runtime::{Registry, Runtime};
+use taylorshift::train::TrainDriver;
+use taylorshift::util::cli::Args;
+use taylorshift::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("analyze") => analyze(&args),
+        Some("artifacts") => artifacts(&args),
+        Some("train") => train(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: taylorshift <analyze|artifacts|train|serve> [--flags]\n\
+                 \n\
+                 analyze            print Table 2 transition points + head scaling\n\
+                 artifacts          list the AOT artifact registry\n\
+                 train              run a training loop (--artifact NAME --steps N)\n\
+                 serve              start engine + synthetic load (--requests N --variant auto)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn analyze(args: &Args) -> anyhow::Result<()> {
+    if args.flag("roofline") {
+        return roofline();
+    }
+    println!("Table 2 — transition points N0 (speed) / N1 (memory):\n");
+    let mut t = Table::new(&["d", "N0", "N1", "N0 bound", "N1 bound"]);
+    for (d, n0, n1) in transitions::table2() {
+        t.row(&[
+            d.to_string(),
+            n0.to_string(),
+            n1.to_string(),
+            format!("{:.0}", transitions::n0_bound(d)),
+            format!("{:.0}", transitions::n1_bound(d)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nFLOP-optimal per-head dim d* = {:.4} (root of 9d^3+10d^2=4, Sec. 4.3)",
+        transitions::d_star_ops()
+    );
+    println!("\nHead scaling at d_emb=256, N=1024 (Section 4.3):\n");
+    let mut t = Table::new(&[
+        "h",
+        "d",
+        "ops_eff[MHSA]",
+        "ops_triv[MHSA]",
+        "entries_eff",
+        "entries_triv",
+    ]);
+    for &h in &[4u64, 8, 16, 32, 64] {
+        t.row(&[
+            h.to_string(),
+            (256 / h).to_string(),
+            mhsa::ops_efficient_mhsa(1024, 256, h).to_string(),
+            mhsa::ops_direct_mhsa(1024, 256, h).to_string(),
+            mhsa::entries_efficient_mhsa(1024, 256, h).to_string(),
+            mhsa::entries_direct_mhsa(1024, 256, h).to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// L1 §Perf deliverable: TPU roofline/VMEM estimates for the Pallas
+/// BlockSpecs (interpret=True gives no TPU wallclock — these are the
+/// structural numbers DESIGN.md §Hardware-Adaptation commits to).
+fn roofline() -> anyhow::Result<()> {
+    use taylorshift::analysis::roofline::{direct_schedule, efficient_schedule, TpuSpec};
+    let spec = TpuSpec::default();
+    println!(
+        "TPU spec: VMEM {} MiB, peak {:.1} TFLOP/s, HBM {:.0} GB/s, balance {:.0} FLOP/B\n",
+        spec.vmem_bytes >> 20,
+        spec.peak_flops / 1e12,
+        spec.hbm_bw / 1e9,
+        spec.peak_flops / spec.hbm_bw
+    );
+    let mut t = Table::new(&[
+        "kernel", "N", "d", "block", "VMEM", "fits", "MXU frac", "intensity", "bound", "est time", "eff",
+    ]);
+    for (n, d) in [(4096u64, 16u64), (16384, 64), (65536, 64)] {
+        for bn in [128u64, 256, 512] {
+            let s = efficient_schedule(n, d, bn, 4);
+            let e = s.estimate(&spec);
+            t.row(&[
+                "efficient".into(),
+                n.to_string(),
+                d.to_string(),
+                bn.to_string(),
+                format!("{:.1} MiB", e.vmem_bytes as f64 / (1 << 20) as f64),
+                if e.fits_vmem { "✓" } else { "✗" }.into(),
+                format!("{:.3}", e.mxu_fraction),
+                format!("{:.0}", e.arithmetic_intensity),
+                if e.compute_bound { "compute" } else { "memory" }.into(),
+                taylorshift::bench_support::fmt_seconds(e.runtime_s),
+                format!("{:.2}", e.efficiency),
+            ]);
+        }
+        let s = direct_schedule(n, d, 256, 4);
+        let e = s.estimate(&spec);
+        t.row(&[
+            "direct".into(),
+            n.to_string(),
+            d.to_string(),
+            "256".into(),
+            format!("{:.1} MiB", e.vmem_bytes as f64 / (1 << 20) as f64),
+            if e.fits_vmem { "✓" } else { "✗" }.into(),
+            format!("{:.3}", e.mxu_fraction),
+            format!("{:.0}", e.arithmetic_intensity),
+            if e.compute_bound { "compute" } else { "memory" }.into(),
+            taylorshift::bench_support::fmt_seconds(e.runtime_s),
+            format!("{:.2}", e.efficiency),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nreading: 'eff' is modeled fraction-of-peak under the roofline — the paper's\n\
+         efficiency-ratio target; block choice trades VMEM fit vs per-step overhead."
+    );
+    Ok(())
+}
+
+fn artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts-dir", "artifacts");
+    let reg = Registry::open(Runtime::cpu()?, dir)?;
+    let mut t = Table::new(&["artifact", "kind", "batch", "seq_len", "params"]);
+    for name in reg.names() {
+        let e = reg.entry(&name)?;
+        t.row(&[
+            name.clone(),
+            e.get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            e.get("batch")
+                .and_then(|b| b.as_usize())
+                .map(|b| b.to_string())
+                .unwrap_or_default(),
+            e.get("seq_len")
+                .and_then(|b| b.as_usize())
+                .map(|b| b.to_string())
+                .unwrap_or_default(),
+            e.get("num_params")
+                .and_then(|b| b.as_usize())
+                .map(|b| b.to_string())
+                .unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts-dir", "artifacts");
+    let artifact = args.str_or("artifact", "listops_efficient_train_b16");
+    let steps = args.usize_or("steps", 200);
+    let seed = args.u64_or("seed", 42);
+    let reg = Registry::open(Runtime::cpu()?, dir)?;
+    let mut driver = TrainDriver::new(&reg, artifact)?;
+    // Pick the data generator from the artifact's task prefix
+    // (listops_* / pixel_* / textbytes_*; serve_* is listops-backed).
+    let task = artifact.split('_').next().unwrap_or("listops");
+    let task = if task == "serve" { "listops" } else { task };
+    let gen = taylorshift::data::task_by_name(task, driver.seq_len())
+        .ok_or_else(|| anyhow::anyhow!("unknown task prefix '{task}' in artifact name"))?;
+    let mut rng = Pcg64::new(seed);
+    println!(
+        "training {artifact} for {steps} steps (B={}, N={})",
+        driver.batch_size(),
+        driver.seq_len()
+    );
+    let report = driver.run(&gen, &mut rng, steps, |s| {
+        if s.step % 10 == 0 {
+            println!(
+                "step {:>5}  loss {:.4}  acc {:.3}  ({:.0} ms)",
+                s.step,
+                s.loss,
+                s.acc,
+                s.step_time_s * 1e3
+            );
+        }
+    })?;
+    println!(
+        "done: final loss {:.4}, acc {:.3}, {:.2} steps/s",
+        report.final_loss, report.final_acc, report.steps_per_s
+    );
+    if let Some(out) = args.get("checkpoint") {
+        driver.save_checkpoint(std::path::Path::new(out))?;
+        println!("checkpoint written to {out}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let config = match args.get("config") {
+        Some(path) => ServerConfig::from_file(path)?,
+        None => ServerConfig::default(),
+    };
+    let requests = args.usize_or("requests", 64);
+    let seed = args.u64_or("seed", 1);
+    let mut engine_cfg = config.engine.clone();
+    if let Some(v) = args.get("variant") {
+        engine_cfg.forced_variant = match v {
+            "auto" => None,
+            other => taylorshift::attention::AttentionVariant::parse(other),
+        };
+    }
+    if let Some(cal) = args.get("calibration") {
+        engine_cfg.selector =
+            taylorshift::attention::selector::Selector::from_json_file(std::path::Path::new(cal))?;
+        println!(
+            "using calibrated crossover from {cal}: N̂0({}) = {:.0}",
+            engine_cfg.head_dim,
+            engine_cfg.selector.crossover(engine_cfg.head_dim)
+        );
+    }
+    let dir = config.artifacts_dir.clone();
+    let prefix = config.prefix.clone();
+    let buckets = config.buckets.clone();
+    let batch_sizes = config.batch_sizes.clone();
+    println!(
+        "starting engine (buckets {buckets:?}, adaptive crossover N0({})≈{:.0})",
+        engine_cfg.head_dim,
+        taylorshift::attention::selector::Selector::analytical().crossover(engine_cfg.head_dim)
+    );
+    let engine = Engine::start_with(engine_cfg, move || {
+        RegistryExecutor::new(&dir, &prefix, &buckets, &batch_sizes)
+    })?;
+
+    // Synthetic client load: mixed-length ListOps queries.
+    let gen = ListOpsGen {
+        min_len: 16,
+        max_len: 900,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::new(seed);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..requests {
+        let ex = gen.generate(&mut rng);
+        match engine.submit(ex.tokens) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => println!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} requests in {wall:.2}s ({:.1} req/s)\n",
+        ok as f64 / wall
+    );
+    println!("{}", engine.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Thin wrapper around the PJRT CPU client.
+//!
+//! One `Runtime` per process; executables and buffers keep a reference
+//! to it. (The `xla` crate's `PjRtClient` is internally refcounted, so
+//! clones share the underlying client.)
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client handle.
+#[derive(Clone)]
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client. ~100 ms; do it once.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&computation)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Compile an in-memory computation (emitter path).
+    pub fn compile(&self, computation: &xla::XlaComputation) -> Result<xla::PjRtLoadedExecutable> {
+        self.client
+            .compile(computation)
+            .context("compiling built computation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+}

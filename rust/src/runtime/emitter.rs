@@ -1,0 +1,221 @@
+//! Rust-native attention emitter: builds the three attention variants
+//! directly with `XlaBuilder` for ANY `(N, d)` at runtime.
+//!
+//! This is what lets the coordinator specialize executables to new
+//! sequence lengths without touching python — the AOT grid covers the
+//! common buckets; the emitter covers the tail (and powers the Fig. 2
+//! benchmark sweep, which needs dozens of N values per d). Parity with
+//! the jax-lowered artifacts and the pure-rust reference is enforced by
+//! integration tests (`rust/tests/runtime_parity.rs`).
+
+use super::client::Runtime;
+use anyhow::{Context, Result};
+use xla::{ElementType, XlaBuilder, XlaComputation, XlaOp};
+
+/// Which computation to emit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmitVariant {
+    TaylorDirect,
+    TaylorEfficient,
+    Softmax,
+}
+
+impl From<crate::attention::AttentionVariant> for EmitVariant {
+    fn from(v: crate::attention::AttentionVariant) -> Self {
+        match v {
+            crate::attention::AttentionVariant::Direct => Self::TaylorDirect,
+            crate::attention::AttentionVariant::Efficient => Self::TaylorEfficient,
+            crate::attention::AttentionVariant::Softmax => Self::Softmax,
+        }
+    }
+}
+
+const F32: ElementType = ElementType::F32;
+
+/// Row-wise l2 normalization scaled by `scale`.
+/// (XLA binary ops broadcast degenerate dims for same-rank operands, so
+/// (N,d) ∘ (N,1) works without explicit BroadcastInDim.)
+fn normalize_rows(b: &XlaBuilder, x: &XlaOp, scale: f32) -> Result<XlaOp> {
+    let sumsq = x.mul_(x)?.reduce_sum(&[1], true)?; // (N, 1)
+    let norm = sumsq.sqrt()?.max(&b.c0(1e-12f32)?)?;
+    x.div_(&norm)?.mul_(&b.c0(scale)?).context("scaling rows")
+}
+
+/// Row-wise tensor product A ⊠ A → (N, d²): reshape + degenerate
+/// broadcast multiply, exactly the Algorithm 1 Line 1-3 definition.
+fn boxtimes_self(x: &XlaOp, n: i64, d: i64) -> Result<XlaOp> {
+    let left = x.reshape(&[n, d, 1])?;
+    let right = x.reshape(&[n, 1, d])?;
+    left.mul_(&right)?
+        .reshape(&[n, d * d])
+        .context("boxtimes reshape")
+}
+
+/// Build `f(q, k, v) -> (y,)` for one head at shape `(n, d)`, with the
+/// paper's normalization and temperature `tau` baked in as constants.
+pub fn build_attention(
+    variant: EmitVariant,
+    n: usize,
+    d: usize,
+    tau: f32,
+) -> Result<XlaComputation> {
+    let b = XlaBuilder::new(&format!("attn_{variant:?}_n{n}_d{d}"));
+    let (ni, di) = (n as i64, d as i64);
+    let q = b.parameter(0, F32, &[ni, di], "q")?;
+    let k = b.parameter(1, F32, &[ni, di], "k")?;
+    let v = b.parameter(2, F32, &[ni, di], "v")?;
+    let y = match variant {
+        EmitVariant::Softmax => emit_softmax(&b, &q, &k, &v, d)?,
+        EmitVariant::TaylorDirect => emit_direct(&b, &q, &k, &v, n, d, tau)?,
+        EmitVariant::TaylorEfficient => emit_efficient(&b, &q, &k, &v, n, d, tau)?,
+    };
+    // Match the AOT artifacts' return_tuple=True convention.
+    let root = b.tuple(&[y])?;
+    b.build(&root).context("building attention computation")
+}
+
+fn emit_softmax(b: &XlaBuilder, q: &XlaOp, k: &XlaOp, v: &XlaOp, d: usize) -> Result<XlaOp> {
+    let scores = q
+        .matmul(&k.transpose(&[1, 0])?)?
+        .mul_(&b.c0(1.0 / (d as f32).sqrt())?)?;
+    let weights = scores.softmax(1)?;
+    weights.matmul(v).context("softmax @ V")
+}
+
+fn emit_direct(
+    b: &XlaBuilder,
+    q: &XlaOp,
+    k: &XlaOp,
+    v: &XlaOp,
+    n: usize,
+    d: usize,
+    tau: f32,
+) -> Result<XlaOp> {
+    let qn = normalize_rows(b, q, tau)?;
+    let kn = normalize_rows(b, k, 1.0)?;
+    let s = qn.matmul(&kn.transpose(&[1, 0])?)?;
+    // a = 1 + s + s²/2
+    let a = b
+        .c0(1.0f32)?
+        .add_(&s)?
+        .add_(&s.mul_(&s)?.mul_(&b.c0(0.5f32)?)?)?;
+    let denom = a.reduce_sum(&[1], true)?;
+    let y = a.matmul(v)?.div_(&denom)?;
+    y.mul_(&b.c0((n as f32 / d as f32).sqrt())?)
+        .context("output scale")
+}
+
+fn emit_efficient(
+    b: &XlaBuilder,
+    q: &XlaOp,
+    k: &XlaOp,
+    v: &XlaOp,
+    n: usize,
+    d: usize,
+    tau: f32,
+) -> Result<XlaOp> {
+    let (ni, di) = (n as i64, d as i64);
+    let alpha = (d as f32).powf(0.25);
+
+    // V_aug = (1/N) [sqrt(d/N)·1 | V]  — (N, d+1)
+    let denom_col = b
+        .c0((d as f32 / n as f32).sqrt() / n as f32)?
+        .broadcast(&[ni, 1])?;
+    let v_scaled = v.mul_(&b.c0(1.0 / n as f32)?)?;
+    let v_aug = denom_col.concat_in_dim(&[&v_scaled], 1)?;
+
+    let qn = normalize_rows(b, q, alpha * tau)?;
+    let kn = normalize_rows(b, k, alpha)?;
+
+    // A_mod = (K⊠K)ᵀ V_aug — (d², d+1)
+    let kbox = boxtimes_self(&kn, ni, di)?;
+    let a_mod = kbox.transpose(&[1, 0])?.matmul(&v_aug)?;
+
+    // Ŷ = ½ (Q⊠Q) A_mod + α² Q (Kᵀ V_aug) + α⁴ Σ_col V_aug
+    let qbox = boxtimes_self(&qn, ni, di)?;
+    let y_sq = qbox.matmul(&a_mod)?;
+    let ktv = kn.transpose(&[1, 0])?.matmul(&v_aug)?;
+    let y_lin = qn.matmul(&ktv)?;
+    let col_sums = v_aug.reduce_sum(&[0], true)?; // (1, d+1)
+    let y_hat = y_sq
+        .mul_(&b.c0(0.5f32)?)?
+        .add_(&y_lin.mul_(&b.c0(alpha * alpha)?)?)?
+        .add_(&col_sums.mul_(&b.c0(alpha.powi(4))?)?)?;
+
+    // Split off the denominator column, divide.
+    let y_denom = y_hat.slice_in_dim1(0, 1, 1)?; // (N, 1)
+    let y_nom = y_hat.slice_in_dim1(1, di + 1, 1)?; // (N, d)
+    y_nom.div_(&y_denom).context("final division")
+}
+
+/// Build multi-head self-attention `f(q, k, v) -> (y,)` where
+/// `q/k/v: (h, n, d)` are the already-projected per-head tensors and
+/// `y: (n, h·d)` concatenates head outputs feature-wise. Heads unroll
+/// into one fused XLA graph — this is what the Table 5 / Fig. 9 head-
+/// scaling benches execute.
+pub fn build_mhsa(
+    variant: EmitVariant,
+    n: usize,
+    d: usize,
+    h: usize,
+    tau: f32,
+) -> Result<XlaComputation> {
+    let b = XlaBuilder::new(&format!("mhsa_{variant:?}_n{n}_d{d}_h{h}"));
+    let (ni, di, hi) = (n as i64, d as i64, h as i64);
+    let q = b.parameter(0, F32, &[hi, ni, di], "q")?;
+    let k = b.parameter(1, F32, &[hi, ni, di], "k")?;
+    let v = b.parameter(2, F32, &[hi, ni, di], "v")?;
+    let mut heads = Vec::with_capacity(h);
+    for head in 0..hi {
+        let slice = |t: &XlaOp| -> Result<XlaOp> {
+            Ok(t.slice_in_dim1(head, head + 1, 0)?.reshape(&[ni, di])?)
+        };
+        let (qh, kh, vh) = (slice(&q)?, slice(&k)?, slice(&v)?);
+        let y = match variant {
+            EmitVariant::Softmax => emit_softmax(&b, &qh, &kh, &vh, d)?,
+            EmitVariant::TaylorDirect => emit_direct(&b, &qh, &kh, &vh, n, d, tau)?,
+            EmitVariant::TaylorEfficient => emit_efficient(&b, &qh, &kh, &vh, n, d, tau)?,
+        };
+        heads.push(y);
+    }
+    let first = heads[0].clone();
+    let rest: Vec<&XlaOp> = heads[1..].iter().collect();
+    let y = if rest.is_empty() {
+        first
+    } else {
+        first.concat_in_dim(&rest, 1)?
+    };
+    let root = b.tuple(&[y])?;
+    b.build(&root).context("building mhsa computation")
+}
+
+/// Emit + compile in one step.
+pub fn compile_attention(
+    runtime: &Runtime,
+    variant: EmitVariant,
+    n: usize,
+    d: usize,
+    tau: f32,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let computation = build_attention(variant, n, d, tau)?;
+    runtime.compile(&computation)
+}
+
+/// Convenience: run a compiled single-head attention on host tensors.
+pub fn run_attention(
+    exe: &xla::PjRtLoadedExecutable,
+    q: &crate::tensor::Tensor,
+    k: &crate::tensor::Tensor,
+    v: &crate::tensor::Tensor,
+) -> Result<crate::tensor::Tensor> {
+    let inputs = [
+        super::literal::tensor_to_literal(q)?,
+        super::literal::tensor_to_literal(k)?,
+        super::literal::tensor_to_literal(v)?,
+    ];
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0]
+        .to_literal_sync()
+        .context("fetching attention output")?;
+    let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+    super::literal::literal_to_tensor(&out)
+}

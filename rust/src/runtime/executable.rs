@@ -1,0 +1,144 @@
+//! A compiled artifact plus its manifest metadata.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Tensor IO description from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "s32" | "u8"
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(|x| x.as_usize_vec())
+                .ok_or_else(|| anyhow!("spec missing shape"))?,
+            dtype: j
+                .get("dtype")
+                .and_then(|x| x.as_str())
+                .unwrap_or("f32")
+                .to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// IO signature of an artifact.
+#[derive(Clone, Debug, Default)]
+pub struct IoSpec {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Parameter leaves in flatten order (train/infer/eval artifacts).
+    pub params: Vec<TensorSpec>,
+}
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Infer,
+    Train,
+    Eval,
+    Attention,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "infer" => Self::Infer,
+            "train" => Self::Train,
+            "eval" => Self::Eval,
+            "attention" => Self::Attention,
+            other => bail!("unknown artifact kind {other}"),
+        })
+    }
+}
+
+/// A compiled, ready-to-run artifact.
+pub struct Executable {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub io: IoSpec,
+    pub batch: Option<usize>,
+    pub seq_len: Option<usize>,
+    pub num_params: usize,
+    /// Raw manifest entry for artifact-kind-specific fields.
+    pub meta: Json,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn new(
+        name: String,
+        kind: ArtifactKind,
+        io: IoSpec,
+        meta: Json,
+        exe: xla::PjRtLoadedExecutable,
+    ) -> Self {
+        let batch = meta.get("batch").and_then(|x| x.as_usize());
+        let seq_len = meta.get("seq_len").and_then(|x| x.as_usize());
+        let num_params = meta.get("num_params").and_then(|x| x.as_usize()).unwrap_or(0);
+        Self {
+            name,
+            kind,
+            io,
+            batch,
+            seq_len,
+            num_params,
+            meta,
+            exe,
+        }
+    }
+
+    /// Execute with host literals (owned or borrowed — borrowing avoids
+    /// copying large parameter sets on the hot path); returns the
+    /// decomposed output tuple. (aot.py lowers with `return_tuple=True`.)
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.io.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.io.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        tuple.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Execute keeping results on device (hot loops: train steps feed
+    /// outputs back as inputs without host round-trips).
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        Ok(result.swap_remove(0))
+    }
+
+    pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+}

@@ -1,0 +1,82 @@
+//! Host tensors ⇄ `xla::Literal` conversions.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// f32 `Tensor` → literal with the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .context("reshaping tensor literal")
+}
+
+/// Literal → f32 `Tensor` (must be an f32 array literal).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&x| x as usize).collect();
+    let data = lit.to_vec::<f32>().context("literal is not f32")?;
+    Ok(Tensor::new(&dims, data))
+}
+
+/// i32 token matrix → literal (B, N).
+pub fn tokens_to_literal(tokens: &[Vec<i32>]) -> Result<xla::Literal> {
+    if tokens.is_empty() {
+        bail!("empty token batch");
+    }
+    let n = tokens[0].len();
+    if tokens.iter().any(|row| row.len() != n) {
+        bail!("ragged token batch");
+    }
+    let flat: Vec<i32> = tokens.iter().flatten().copied().collect();
+    xla::Literal::vec1(&flat)
+        .reshape(&[tokens.len() as i64, n as i64])
+        .context("reshaping token literal")
+}
+
+/// i32 vector literal (labels).
+pub fn labels_to_literal(labels: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(labels)
+}
+
+/// i32 scalar literal (step counter).
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// f32 scalar readback.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("reading f32 scalar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::randn(&[3, 5], 1);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tokens_shape() {
+        let lit = tokens_to_literal(&[vec![1, 2, 3], vec![4, 5, 6]]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn ragged_tokens_rejected() {
+        assert!(tokens_to_literal(&[vec![1], vec![2, 3]]).is_err());
+    }
+
+    #[test]
+    fn scalar_readback() {
+        let lit = xla::Literal::scalar(2.5f32);
+        assert_eq!(literal_to_f32(&lit).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`), compiles them on the CPU PJRT client, and
+//! executes them from the L3 hot path — plus an `XlaBuilder`-based
+//! attention **emitter** that constructs the same attention
+//! computations natively in rust for arbitrary `(N, d)`, giving the
+//! coordinator runtime shape specialization with python nowhere in
+//! sight.
+
+pub mod client;
+pub mod emitter;
+pub mod executable;
+pub mod literal;
+pub mod registry;
+
+pub use client::Runtime;
+pub use executable::{ArtifactKind, Executable, IoSpec, TensorSpec};
+pub use registry::Registry;

@@ -1,0 +1,164 @@
+//! Artifact registry: reads `artifacts/manifest.json`, lazily compiles
+//! HLO modules on first use, and caches executables by name.
+//!
+//! Also loads the `.params.bin` initial-parameter blobs the AOT
+//! pipeline writes next to train/infer artifacts (flat little-endian
+//! f32 in manifest order).
+
+use super::client::Runtime;
+use super::executable::{ArtifactKind, Executable, IoSpec, TensorSpec};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Manifest-driven artifact store with an executable cache.
+pub struct Registry {
+    runtime: Runtime,
+    dir: PathBuf,
+    manifest: Json,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    /// Open `dir` (usually `artifacts/`), reading `manifest.json`.
+    pub fn open(runtime: Runtime, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let version = manifest.get("version").and_then(|v| v.as_usize());
+        if version != Some(1) {
+            bail!("unsupported manifest version {version:?}");
+        }
+        Ok(Self {
+            runtime,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// All artifact names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Artifact names filtered by kind.
+    pub fn names_of_kind(&self, kind: ArtifactKind) -> Vec<String> {
+        self.names()
+            .into_iter()
+            .filter(|n| {
+                self.entry(n)
+                    .ok()
+                    .and_then(|e| e.get("kind").and_then(|k| k.as_str()).map(String::from))
+                    .and_then(|k| ArtifactKind::parse(&k).ok())
+                    == Some(kind)
+            })
+            .collect()
+    }
+
+    /// Raw manifest entry.
+    pub fn entry(&self, name: &str) -> Result<&Json> {
+        self.manifest
+            .get("artifacts")
+            .and_then(|a| a.get(name))
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Whether an artifact exists.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entry(name).is_ok()
+    }
+
+    /// Compile (or fetch cached) an artifact.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let entry = self.entry(name)?.clone();
+        let kind = ArtifactKind::parse(
+            entry
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing kind"))?,
+        )?;
+        let path = self.dir.join(
+            entry
+                .get("path")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing path"))?,
+        );
+        let io = Self::io_spec(&entry)?;
+        let exe = self.runtime.compile_hlo_file(&path)?;
+        let executable = Arc::new(Executable::new(name.to_string(), kind, io, entry, exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&executable));
+        Ok(executable)
+    }
+
+    fn io_spec(entry: &Json) -> Result<IoSpec> {
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            entry
+                .get(key)
+                .and_then(|x| x.as_arr())
+                .map(|items| items.iter().map(TensorSpec::from_json).collect())
+                .unwrap_or_else(|| Ok(Vec::new()))
+        };
+        Ok(IoSpec {
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+            params: parse_list("params")?,
+        })
+    }
+
+    /// Load the initial parameters for a train/infer artifact: the flat
+    /// f32 blob is split per the manifest's param shapes.
+    pub fn load_params(&self, name: &str) -> Result<Vec<crate::tensor::Tensor>> {
+        let entry = self.entry(name)?;
+        let bin = entry
+            .get("params_bin")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow!("artifact '{name}' has no params_bin"))?;
+        let bytes = std::fs::read(self.dir.join(bin))
+            .with_context(|| format!("reading params blob {bin}"))?;
+        let specs = Self::io_spec(entry)?.params;
+        let total: usize = specs.iter().map(|s| s.elements()).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "params blob {bin}: {} bytes but manifest wants {} f32s",
+                bytes.len(),
+                total
+            );
+        }
+        let mut tensors = Vec::with_capacity(specs.len());
+        let mut offset = 0usize;
+        for spec in &specs {
+            let count = spec.elements();
+            let data: Vec<f32> = bytes[offset * 4..(offset + count) * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push(crate::tensor::Tensor::new(&spec.shape, data));
+            offset += count;
+        }
+        Ok(tensors)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

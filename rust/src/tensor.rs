@@ -1,0 +1,519 @@
+//! Minimal dense tensor for the rust-side reference attention
+//! implementations, tests, and host-side pre/post-processing.
+//!
+//! Row-major `f32` storage with an arbitrary-rank shape. This is *not*
+//! a performance claim — the performant path runs through XLA — but the
+//! matmul is cache-blocked so the pure-rust reference attention used in
+//! tests and benches is not absurdly slow.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---------- constructors ----------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![value; shape.iter().product()],
+        }
+    }
+
+    /// Standard-normal entries from a deterministic seed.
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let data = (0..shape.iter().product())
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        Self::new(shape, data)
+    }
+
+    /// Uniform entries in [lo, hi).
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let data = (0..shape.iter().product())
+            .map(|_| lo + (hi - lo) * rng.next_f32())
+            .collect();
+        Self::new(shape, data)
+    }
+
+    /// Rows drawn uniformly from the unit sphere S^{d-1} — the sampling
+    /// regime of the paper's Table 1 / Fig. 5 scaling study.
+    pub fn rand_unit_rows(n: usize, d: usize, seed: u64) -> Self {
+        let mut t = Self::randn(&[n, d], seed);
+        for i in 0..n {
+            let norm = (0..d).map(|j| t.at2(i, j).powi(2)).sum::<f32>().sqrt().max(1e-12);
+            for j in 0..d {
+                *t.at2_mut(i, j) /= norm;
+            }
+        }
+        t
+    }
+
+    // ---------- shape ----------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} mismatches",
+            self.shape,
+            shape
+        );
+        Tensor::new(shape, self.data.clone())
+    }
+
+    // ---------- element access (2-D helpers; hot in reference attn) ----------
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    // ---------- elementwise ----------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|&x| f(x)).collect())
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        )
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::new(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        )
+    }
+
+    // ---------- linear algebra ----------
+
+    /// Cache-blocked matmul for 2-D tensors: `self (m×k) @ other (k×n)`.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2, "matmul lhs must be 2-D");
+        assert_eq!(other.rank(), 2, "matmul rhs must be 2-D");
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Row-wise tensor product ⊠ from the paper (Section 3.2):
+    /// `[A ⊠ B]_n = vec(A_n ⊗ B_n) ∈ R^{d_a·d_b}`.
+    pub fn boxtimes(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        assert_eq!(self.shape[0], other.shape[0]);
+        let (n, da) = (self.shape[0], self.shape[1]);
+        let db = other.shape[1];
+        let mut out = vec![0.0f32; n * da * db];
+        for i in 0..n {
+            let a = self.row(i);
+            let b = other.row(i);
+            let orow = &mut out[i * da * db..(i + 1) * da * db];
+            for (p, &av) in a.iter().enumerate() {
+                for (q, &bv) in b.iter().enumerate() {
+                    orow[p * db + q] = av * bv;
+                }
+            }
+        }
+        Tensor::new(&[n, da * db], out)
+    }
+
+    /// Column sums of a 2-D tensor → 1-D of length `cols`
+    /// (`Σ_col V` in the paper's constant-term computation).
+    pub fn col_sums(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j] += self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n], out)
+    }
+
+    /// ℓ2-normalize every row, then scale by `scale` — the paper's
+    /// q ← τ q / ‖q‖₂ input normalization.
+    pub fn normalize_rows(&self, scale: f32) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let mut out = self.clone();
+        let (m, n) = (self.shape[0], self.shape[1]);
+        for i in 0..m {
+            let norm = (0..n)
+                .map(|j| out.at2(i, j).powi(2))
+                .sum::<f32>()
+                .sqrt()
+                .max(1e-12);
+            let f = scale / norm;
+            for j in 0..n {
+                *out.at2_mut(i, j) *= f;
+            }
+        }
+        out
+    }
+
+    /// Concatenate along the last axis (2-D only).
+    pub fn concat_cols(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        assert_eq!(self.shape[0], other.shape[0]);
+        let (m, n1) = (self.shape[0], self.shape[1]);
+        let n2 = other.shape[1];
+        let mut out = vec![0.0f32; m * (n1 + n2)];
+        for i in 0..m {
+            out[i * (n1 + n2)..i * (n1 + n2) + n1].copy_from_slice(self.row(i));
+            out[i * (n1 + n2) + n1..(i + 1) * (n1 + n2)].copy_from_slice(other.row(i));
+        }
+        Tensor::new(&[m, n1 + n2], out)
+    }
+
+    /// Split off the first `k` columns: returns `(left m×k, right m×(n-k))`.
+    pub fn split_cols(&self, k: usize) -> (Tensor, Tensor) {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        assert!(k <= n);
+        let mut left = vec![0.0f32; m * k];
+        let mut right = vec![0.0f32; m * (n - k)];
+        for i in 0..m {
+            left[i * k..(i + 1) * k].copy_from_slice(&self.row(i)[..k]);
+            right[i * (n - k)..(i + 1) * (n - k)].copy_from_slice(&self.row(i)[k..]);
+        }
+        (Tensor::new(&[m, k], left), Tensor::new(&[m, n - k], right))
+    }
+
+    // ---------- reductions / comparisons ----------
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm of the whole tensor.
+    pub fn frobenius(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Mean ℓ2 norm of rows — the "mean size" statistic of Table 1.
+    pub fn mean_row_norm(&self) -> f64 {
+        assert_eq!(self.rank(), 2);
+        let m = self.shape[0];
+        (0..m)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / m as f64
+    }
+
+    /// Elementwise closeness à la `numpy.allclose`.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Largest absolute difference (diagnostics for test failures).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Index of the max element in a 1-D tensor (classification argmax).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::randn(&[5, 5], 1);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        assert!(a.matmul(&eye).allclose(&a, 1e-6, 1e-6));
+        assert!(eye.matmul(&a).allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_blocking_matches_naive_large() {
+        // exercise the BK=64 blocking boundary
+        let a = Tensor::randn(&[10, 130], 2);
+        let b = Tensor::randn(&[130, 7], 3);
+        let c = a.matmul(&b);
+        // naive re-computation
+        let mut expect = Tensor::zeros(&[10, 7]);
+        for i in 0..10 {
+            for j in 0..7 {
+                let mut s = 0.0;
+                for k in 0..130 {
+                    s += a.at2(i, k) * b.at2(k, j);
+                }
+                *expect.at2_mut(i, j) = s;
+            }
+        }
+        assert!(c.allclose(&expect, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::randn(&[3, 7], 4);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().shape(), &[7, 3]);
+        assert_eq!(a.at2(1, 5), a.transpose().at2(5, 1));
+    }
+
+    #[test]
+    fn boxtimes_matches_definition() {
+        // [A ⊠ B]_{n, p*db+q} = A_{n,p} B_{n,q}
+        let a = Tensor::randn(&[4, 3], 5);
+        let b = Tensor::randn(&[4, 2], 6);
+        let c = a.boxtimes(&b);
+        assert_eq!(c.shape(), &[4, 6]);
+        for n in 0..4 {
+            for p in 0..3 {
+                for q in 0..2 {
+                    let expect = a.at2(n, p) * b.at2(n, q);
+                    assert!((c.at2(n, p * 2 + q) - expect).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boxtimes_linearizes_squared_gram() {
+        // Core identity of Section 3.2: (QKᵀ)⊙² = Q^⊠2 (K^⊠2)ᵀ.
+        let q = Tensor::randn(&[6, 4], 7);
+        let k = Tensor::randn(&[5, 4], 8);
+        let gram = q.matmul(&k.transpose());
+        let squared = gram.hadamard(&gram);
+        let lin = q.boxtimes(&q).matmul(&k.boxtimes(&k).transpose());
+        assert!(lin.allclose(&squared, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let a = Tensor::randn(&[10, 8], 9);
+        let n = a.normalize_rows(2.5);
+        for i in 0..10 {
+            let norm: f32 = n.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 2.5).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rand_unit_rows_on_sphere() {
+        let a = Tensor::rand_unit_rows(100, 16, 10);
+        for i in 0..100 {
+            let norm: f32 = a.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let a = Tensor::randn(&[4, 3], 11);
+        let b = Tensor::randn(&[4, 5], 12);
+        let c = a.concat_cols(&b);
+        assert_eq!(c.shape(), &[4, 8]);
+        let (l, r) = c.split_cols(3);
+        assert_eq!(l, a);
+        assert_eq!(r, b);
+    }
+
+    #[test]
+    fn col_sums() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.col_sums().data(), &[5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn argmax_and_abs_max() {
+        let a = Tensor::new(&[4], vec![0.1, -7.0, 3.0, 2.0]);
+        assert_eq!(a.argmax(), 2);
+        assert_eq!(a.abs_max(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+}

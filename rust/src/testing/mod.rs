@@ -1,0 +1,4 @@
+//! In-tree testing support: a small property-based testing framework
+//! (stand-in for `proptest`, which is unavailable offline).
+
+pub mod prop;

@@ -1,0 +1,340 @@
+//! Mini property-based testing framework.
+//!
+//! `proptest`-inspired but tiny: generators produce random values from a
+//! seeded [`Pcg64`]; on failure the runner greedily **shrinks** the
+//! counterexample via the generator's `shrink` candidates before
+//! reporting. Deterministic per seed, so failures are reproducible by
+//! rerunning the same test binary.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this environment)
+//! use taylorshift::testing::prop::{Config, Gen, run};
+//!
+//! // Reversing twice is the identity.
+//! run(Config::default().cases(64), Gen::vec(Gen::u64_range(0, 100), 0, 20), |xs| {
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     twice == *xs
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0xDEC0DE,
+            max_shrink_steps: 512,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// A generator: sampling plus shrink candidates.
+pub struct Gen<T> {
+    sample: Box<dyn Fn(&mut Pcg64) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        sample: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self {
+            sample: Box::new(sample),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Constant generator (no shrinking).
+    pub fn just(value: T) -> Self {
+        let v2 = value.clone();
+        Gen::new(move |_| value.clone(), move |_| vec![])
+            .with_shrink(move |_| vec![v2.clone()])
+    }
+
+    fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.sample)(rng)
+    }
+
+    pub fn shrink_candidates(&self, value: &T) -> Vec<T> {
+        (self.shrink)(value)
+    }
+
+    /// Map the generated value (shrinking disabled across the map; use
+    /// sparingly for derived values).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + Clone + 'static) -> Gen<U> {
+        let sample = self.sample;
+        Gen::new(move |rng| f((sample)(rng)), |_| vec![])
+    }
+}
+
+impl Gen<u64> {
+    /// Uniform in the inclusive range; shrinks toward `lo`.
+    pub fn u64_range(lo: u64, hi: u64) -> Gen<u64> {
+        Gen::new(
+            move |rng| rng.range_u64(lo, hi),
+            move |&v| {
+                let mut c = Vec::new();
+                if v > lo {
+                    c.push(lo);
+                    c.push(lo + (v - lo) / 2);
+                    c.push(v - 1);
+                }
+                c.dedup();
+                c
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize range; shrinks toward `lo`.
+    pub fn usize_range(lo: usize, hi: usize) -> Gen<usize> {
+        Gen::new(
+            move |rng| rng.range_u64(lo as u64, hi as u64) as usize,
+            move |&v| {
+                let mut c = Vec::new();
+                if v > lo {
+                    c.push(lo);
+                    c.push(lo + (v - lo) / 2);
+                    c.push(v - 1);
+                }
+                c.dedup();
+                c
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform in [lo, hi); shrinks toward 0 / lo.
+    pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+        Gen::new(
+            move |rng| lo + (hi - lo) * rng.next_f64(),
+            move |&v| {
+                let mut c = vec![];
+                if v != lo {
+                    c.push(lo);
+                }
+                if lo <= 0.0 && 0.0 <= hi && v != 0.0 {
+                    c.push(0.0);
+                }
+                c.push(v / 2.0);
+                c
+            },
+        )
+    }
+}
+
+impl<T: Clone + 'static> Gen<Vec<T>> {
+    /// Vector with length in [min_len, max_len]; shrinks by halving
+    /// length, dropping elements, and shrinking single elements.
+    pub fn vec(element: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+        let element = std::rc::Rc::new(element);
+        let e1 = element.clone();
+        Gen::new(
+            move |rng| {
+                let len = rng.range_u64(min_len as u64, max_len as u64) as usize;
+                (0..len).map(|_| e1.sample(rng)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out: Vec<Vec<T>> = Vec::new();
+                if v.len() > min_len {
+                    // halve
+                    out.push(v[..min_len.max(v.len() / 2)].to_vec());
+                    // drop one element at a few positions
+                    for i in [0, v.len() / 2, v.len() - 1] {
+                        if v.len() - 1 >= min_len {
+                            let mut w = v.clone();
+                            w.remove(i.min(w.len() - 1));
+                            out.push(w);
+                        }
+                    }
+                }
+                // shrink a single element
+                for (i, x) in v.iter().enumerate().take(4) {
+                    for cand in element.shrink_candidates(x) {
+                        let mut w = v.clone();
+                        w[i] = cand;
+                        out.push(w);
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pair two generators.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> Gen<(A, B)> {
+    let ga = std::rc::Rc::new(ga);
+    let gb = std::rc::Rc::new(gb);
+    let (ga1, gb1) = (ga.clone(), gb.clone());
+    Gen::new(
+        move |rng| (ga1.sample(rng), gb1.sample(rng)),
+        move |(a, b)| {
+            let mut out = Vec::new();
+            for ca in ga.shrink_candidates(a) {
+                out.push((ca, b.clone()));
+            }
+            for cb in gb.shrink_candidates(b) {
+                out.push((a.clone(), cb));
+            }
+            out
+        },
+    )
+}
+
+/// Run `property` on `config.cases` random inputs; panics with the
+/// (shrunk) counterexample on the first failure.
+pub fn run<T: Clone + std::fmt::Debug + 'static>(
+    config: Config,
+    gen: Gen<T>,
+    property: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg64::new(config.seed);
+    for case in 0..config.cases {
+        let input = gen.sample(&mut rng);
+        if !check(&property, &input) {
+            let shrunk = shrink_loop(&gen, &property, input.clone(), config.max_shrink_steps);
+            panic!(
+                "property failed (case {case}, seed {:#x}).\n  original: {:?}\n  shrunk:   {:?}",
+                config.seed, input, shrunk
+            );
+        }
+    }
+}
+
+fn check<T>(property: &impl Fn(&T) -> bool, input: &T) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(input))).unwrap_or(false)
+}
+
+fn shrink_loop<T: Clone + 'static>(
+    gen: &Gen<T>,
+    property: &impl Fn(&T) -> bool,
+    mut failing: T,
+    max_steps: usize,
+) -> T {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in gen.shrink_candidates(&failing) {
+            steps += 1;
+            if !check(property, &cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run(Config::default().cases(64), Gen::u64_range(0, 1000), |&x| {
+            x <= 1000
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        // Property "x < 50" fails for x >= 50; minimal counterexample
+        // reachable by our shrinker from any failing x is 50.
+        let result = std::panic::catch_unwind(|| {
+            run(Config::default().cases(256), Gen::u64_range(0, 1000), |&x| {
+                x < 50
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk:   50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        run(
+            Config::default().cases(128),
+            Gen::vec(Gen::u64_range(0, 9), 2, 17),
+            |xs| xs.len() >= 2 && xs.len() <= 17 && xs.iter().all(|&x| x <= 9),
+        );
+    }
+
+    #[test]
+    fn vec_shrinks_toward_short() {
+        // "no vector contains a 7" — shrunk failure should be short.
+        let result = std::panic::catch_unwind(|| {
+            run(
+                Config::default().cases(512),
+                Gen::vec(Gen::u64_range(0, 9), 0, 30),
+                |xs| !xs.contains(&7),
+            );
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn pair_generator() {
+        run(
+            Config::default().cases(64),
+            pair(Gen::usize_range(1, 64), Gen::usize_range(1, 8)),
+            |&(n, d)| n >= 1 && d <= 8,
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg64::new(99);
+        let mut r2 = Pcg64::new(99);
+        let g = Gen::u64_range(0, 1 << 40);
+        for _ in 0..32 {
+            assert_eq!(g.sample(&mut r1), g.sample(&mut r2));
+        }
+    }
+
+    #[test]
+    fn panicking_property_counts_as_failure() {
+        let result = std::panic::catch_unwind(|| {
+            run(Config::default().cases(16), Gen::u64_range(0, 10), |&x| {
+                if x > 2 {
+                    panic!("boom");
+                }
+                true
+            });
+        });
+        assert!(result.is_err());
+    }
+}

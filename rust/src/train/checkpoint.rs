@@ -1,0 +1,112 @@
+//! Binary checkpoints: flat little-endian f32 tensors with a JSON
+//! sidecar (same wire format as the AOT `*.params.bin` blobs, so
+//! checkpoints and initial parameters are interchangeable).
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Write `tensors` (+ shapes sidecar) to `path` / `path.json`.
+pub fn save(path: &Path, names: &[String], tensors: &[Tensor]) -> Result<()> {
+    assert_eq!(names.len(), tensors.len());
+    let mut bytes = Vec::new();
+    for t in tensors {
+        for &x in t.data() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+    let meta = Json::Arr(
+        names
+            .iter()
+            .zip(tensors)
+            .map(|(n, t)| {
+                Json::from_pairs(vec![
+                    ("name", Json::Str(n.clone())),
+                    (
+                        "shape",
+                        Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path.with_extension("json"), meta.to_string_pretty())
+        .context("writing checkpoint sidecar")?;
+    Ok(())
+}
+
+/// Load a checkpoint saved by [`save`].
+pub fn load(path: &Path) -> Result<(Vec<String>, Vec<Tensor>)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let meta_text = std::fs::read_to_string(path.with_extension("json"))
+        .context("reading checkpoint sidecar")?;
+    let meta = Json::parse(&meta_text).context("parsing checkpoint sidecar")?;
+    let entries = meta
+        .as_arr()
+        .context("sidecar must be an array")?;
+    let mut names = Vec::new();
+    let mut tensors = Vec::new();
+    let mut offset = 0usize;
+    for e in entries {
+        let name = e
+            .get("name")
+            .and_then(|x| x.as_str())
+            .context("entry missing name")?
+            .to_string();
+        let shape = e
+            .get("shape")
+            .and_then(|x| x.as_usize_vec())
+            .context("entry missing shape")?;
+        let count: usize = shape.iter().product();
+        if (offset + count) * 4 > bytes.len() {
+            bail!("checkpoint truncated at {name}");
+        }
+        let data: Vec<f32> = bytes[offset * 4..(offset + count) * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        tensors.push(Tensor::new(&shape, data));
+        names.push(name);
+        offset += count;
+    }
+    if offset * 4 != bytes.len() {
+        bail!("checkpoint has {} trailing bytes", bytes.len() - offset * 4);
+    }
+    Ok((names, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ts_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let names = vec!["a/w".to_string(), "b/tau".to_string()];
+        let tensors = vec![Tensor::randn(&[3, 4], 1), Tensor::randn(&[2], 2)];
+        save(&path, &names, &tensors).unwrap();
+        let (n2, t2) = load(&path).unwrap();
+        assert_eq!(n2, names);
+        assert_eq!(t2, tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let dir = std::env::temp_dir().join(format!("ts_ckpt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        let names = vec!["w".to_string()];
+        let tensors = vec![Tensor::randn(&[4, 4], 3)];
+        save(&path, &names, &tensors).unwrap();
+        // Corrupt: drop last 8 bytes.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,256 @@
+//! The training loop over a `*_train_b*` artifact.
+//!
+//! Artifact signature (manifest order):
+//!   inputs  = params… ‖ m… ‖ v… ‖ step ‖ tokens ‖ labels
+//!   outputs = params… ‖ m… ‖ v… ‖ loss ‖ acc
+//!
+//! The driver keeps the P/M/V state as host literals and feeds fresh
+//! batches from a task generator each step. (At our model scale the
+//! host round-trip is ~1 MB/step; §Perf discusses the device-resident
+//! alternative.)
+
+use crate::data::batch::generate_batch;
+use crate::data::TaskGenerator;
+use crate::runtime::{literal, ArtifactKind, Executable, Registry};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-step record.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStats {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub step_time_s: f64,
+}
+
+/// Summary of a finished run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub history: Vec<TrainStats>,
+    pub final_loss: f32,
+    pub final_acc: f32,
+    pub steps_per_s: f64,
+    /// Eval metrics if an eval artifact was attached: (loss, acc).
+    pub eval: Option<(f32, f32)>,
+}
+
+impl TrainReport {
+    /// Smoothed loss over the last `k` recorded steps.
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(k)..];
+        tail.iter().map(|s| s.loss).sum::<f32>() / tail.len().max(1) as f32
+    }
+}
+
+/// Drives one train-step executable.
+pub struct TrainDriver {
+    exe: Arc<Executable>,
+    eval_exe: Option<Arc<Executable>>,
+    /// params ‖ m ‖ v as literals, in artifact input order.
+    state: Vec<xla::Literal>,
+    n_leaves: usize,
+    batch: usize,
+    seq_len: usize,
+    step: usize,
+}
+
+impl TrainDriver {
+    /// Load a train artifact and its initial parameters; optimizer
+    /// moments start at zero.
+    pub fn new(registry: &Registry, name: &str) -> Result<Self> {
+        let exe = registry.load(name)?;
+        if exe.kind != ArtifactKind::Train {
+            bail!("{name} is not a train artifact");
+        }
+        let params = registry.load_params(name)?;
+        let n_leaves = exe.io.params.len();
+        if params.len() != n_leaves {
+            bail!("params blob mismatch");
+        }
+        let mut state = Vec::with_capacity(3 * n_leaves);
+        for t in &params {
+            state.push(literal::tensor_to_literal(t)?);
+        }
+        for t in &params {
+            state.push(literal::tensor_to_literal(&Tensor::zeros(t.shape()))?);
+        }
+        for t in &params {
+            state.push(literal::tensor_to_literal(&Tensor::zeros(t.shape()))?);
+        }
+        let batch = exe.batch.context("train artifact missing batch")?;
+        let seq_len = exe.seq_len.context("train artifact missing seq_len")?;
+        Ok(Self {
+            exe,
+            eval_exe: None,
+            state,
+            n_leaves,
+            batch,
+            seq_len,
+            step: 0,
+        })
+    }
+
+    /// Attach an eval artifact (same model family) for held-out metrics.
+    pub fn with_eval(mut self, registry: &Registry, name: &str) -> Result<Self> {
+        let exe = registry.load(name)?;
+        if exe.kind != ArtifactKind::Eval {
+            bail!("{name} is not an eval artifact");
+        }
+        self.eval_exe = Some(exe);
+        Ok(self)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// One optimization step on the given batch (must match the
+    /// artifact's (B, N) shape).
+    pub fn step_on(&mut self, tokens: &[Vec<i32>], labels: &[i32]) -> Result<TrainStats> {
+        if tokens.len() != self.batch || labels.len() != self.batch {
+            bail!(
+                "batch shape mismatch: got {}x{}, artifact wants {}x{}",
+                tokens.len(),
+                tokens.first().map(|r| r.len()).unwrap_or(0),
+                self.batch,
+                self.seq_len
+            );
+        }
+        let t0 = Instant::now();
+        let mut inputs = Vec::with_capacity(self.state.len() + 3);
+        // State literals move into the call; they are replaced by the
+        // outputs below (true state round-trip, no copies kept).
+        inputs.append(&mut self.state);
+        inputs.push(literal::scalar_i32(self.step as i32));
+        inputs.push(literal::tokens_to_literal(tokens)?);
+        inputs.push(literal::labels_to_literal(labels));
+        let mut outputs = self.exe.run(&inputs)?;
+        if outputs.len() != 3 * self.n_leaves + 2 {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outputs.len(),
+                3 * self.n_leaves + 2
+            );
+        }
+        let acc = literal::literal_to_f32(&outputs.pop().unwrap())?;
+        let loss = literal::literal_to_f32(&outputs.pop().unwrap())?;
+        self.state = outputs;
+        self.step += 1;
+        Ok(TrainStats {
+            step: self.step,
+            loss,
+            acc,
+            step_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Train `steps` steps on freshly-generated data.
+    pub fn run<G: TaskGenerator>(
+        &mut self,
+        gen: &G,
+        rng: &mut Pcg64,
+        steps: usize,
+        mut on_step: impl FnMut(&TrainStats),
+    ) -> Result<TrainReport> {
+        let mut history = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let batch = generate_batch(gen, rng, self.batch, self.seq_len);
+            let stats = self.step_on(&batch.tokens, &batch.labels)?;
+            on_step(&stats);
+            history.push(stats);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let eval = match &self.eval_exe {
+            Some(_) => Some(self.evaluate(gen, rng, 4)?),
+            None => None,
+        };
+        let last = history.last().copied().context("zero steps")?;
+        Ok(TrainReport {
+            final_loss: last.loss,
+            final_acc: last.acc,
+            steps_per_s: steps as f64 / wall,
+            history,
+            eval,
+        })
+    }
+
+    /// Evaluate on `batches` fresh held-out batches; returns (loss, acc).
+    pub fn evaluate<G: TaskGenerator>(
+        &self,
+        gen: &G,
+        rng: &mut Pcg64,
+        batches: usize,
+    ) -> Result<(f32, f32)> {
+        let eval_exe = self.eval_exe.as_ref().context("no eval artifact attached")?;
+        let eb = eval_exe.batch.context("eval artifact missing batch")?;
+        let en = eval_exe.seq_len.context("eval artifact missing seq_len")?;
+        let (mut loss_sum, mut acc_sum) = (0.0f32, 0.0f32);
+        for _ in 0..batches {
+            let batch = generate_batch(gen, rng, eb, en);
+            let (loss, acc) = self.evaluate_batch(&batch.tokens, &batch.labels)?;
+            loss_sum += loss;
+            acc_sum += acc;
+        }
+        Ok((loss_sum / batches as f32, acc_sum / batches as f32))
+    }
+
+    /// Evaluate one explicit batch with current parameters.
+    pub fn evaluate_batch(&self, tokens: &[Vec<i32>], labels: &[i32]) -> Result<(f32, f32)> {
+        let eval_exe = self.eval_exe.as_ref().context("no eval artifact attached")?;
+        let tokens_lit = literal::tokens_to_literal(tokens)?;
+        let labels_lit = literal::labels_to_literal(labels);
+        // Parameters are borrowed — no copies on the eval path.
+        let inputs: Vec<&xla::Literal> = self.state[..self.n_leaves]
+            .iter()
+            .chain([&tokens_lit, &labels_lit])
+            .collect();
+        let outputs = eval_exe.run(&inputs)?;
+        Ok((
+            literal::literal_to_f32(&outputs[0])?,
+            literal::literal_to_f32(&outputs[1])?,
+        ))
+    }
+
+    /// Current parameter tensors (host copies).
+    pub fn params(&self) -> Result<Vec<Tensor>> {
+        self.state[..self.n_leaves]
+            .iter()
+            .map(literal::literal_to_tensor)
+            .collect()
+    }
+
+    /// Parameter leaf names from the manifest.
+    pub fn param_names(&self) -> Vec<String> {
+        self.exe.io.params.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// Save parameters (not optimizer state) as a checkpoint.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        super::checkpoint::save(path, &self.param_names(), &self.params()?)
+    }
+
+    /// Restore parameters from a checkpoint (moments reset to zero).
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let (names, tensors) = super::checkpoint::load(path)?;
+        if names != self.param_names() {
+            bail!("checkpoint layout mismatch");
+        }
+        for (i, t) in tensors.iter().enumerate() {
+            self.state[i] = literal::tensor_to_literal(t)?;
+        }
+        Ok(())
+    }
+}

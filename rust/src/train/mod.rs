@@ -1,0 +1,11 @@
+//! Training driver: the rust loop around an AOT train-step executable.
+//!
+//! The whole optimization step (forward, backward, LAMB update, lr
+//! schedule) is one HLO module; this module owns the loop — data
+//! generation via `data::*`, state round-tripping, loss/accuracy
+//! tracking, periodic evaluation, and binary checkpointing.
+
+pub mod checkpoint;
+pub mod driver;
+
+pub use driver::{TrainDriver, TrainReport, TrainStats};

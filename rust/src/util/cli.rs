@@ -1,0 +1,132 @@
+//! Tiny command-line parser for the binaries and examples.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes, e.g. `--ns 128,256,512`.
+    pub fn usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name} must be comma-separated integers"))
+                })
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flags_options_positionals() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--n=512", "input.txt"]);
+        assert_eq!(a.positional(), &["serve".to_string(), "input.txt".to_string()]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.usize_or("n", 0), 512);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("steps", 100), 100);
+        assert_eq!(a.f64_or("lr", 1e-3), 1e-3);
+        assert_eq!(a.str_or("variant", "auto"), "auto");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--ns", "128, 256,512"]);
+        assert_eq!(a.usize_list("ns"), Some(vec![128, 256, 512]));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--check"]);
+        assert!(a.flag("check"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities implemented in-tree (the build environment has no
+//! crates.io access beyond the `xla` closure): PRNG, JSON, thread pool,
+//! statistics, and CLI parsing.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,260 @@
+//! Descriptive statistics for benchmarking and experiment reporting:
+//! online moments, percentiles, trimmed means, and least-squares fits
+//! (linear and parabola — the paper extrapolates memory curves for
+//! d ∈ {64, 128} in Fig. 2 by fitting a parabola; we do the same).
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile with linear interpolation; `q` in [0, 1]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Mean after trimming `trim_frac` of samples from each tail — robust
+/// timing statistic (drops warmup spikes and scheduler noise).
+pub fn trimmed_mean(xs: &[f64], trim_frac: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((v.len() as f64) * trim_frac).floor() as usize;
+    let kept = &v[k..v.len() - k.min(v.len() - 1)];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+/// Least-squares straight line `y = a + b x`; returns `(a, b)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Least-squares parabola `y = a + b x + c x²`; returns `(a, b, c)`.
+/// Solves the 3×3 normal equations by Gaussian elimination.
+pub fn parabola_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 3);
+    let n = xs.len() as f64;
+    let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+    let (mut t0, mut t1, mut t2) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        let x2 = x * x;
+        s1 += x;
+        s2 += x2;
+        s3 += x2 * x;
+        s4 += x2 * x2;
+        t0 += y;
+        t1 += x * y;
+        t2 += x2 * y;
+    }
+    let mut m = [[n, s1, s2, t0], [s1, s2, s3, t1], [s2, s3, s4, t2]];
+    // Gaussian elimination with partial pivoting.
+    for col in 0..3 {
+        let pivot = (col..3)
+            .max_by(|&a, &b| m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, pivot);
+        let p = m[col][col];
+        assert!(p.abs() > 1e-12, "singular normal equations");
+        for row in 0..3 {
+            if row != col {
+                let f = m[row][col] / p;
+                for k in col..4 {
+                    m[row][k] -= f * m[col][k];
+                }
+            }
+        }
+    }
+    (m[0][3] / m[0][0], m[1][3] / m[1][1], m[2][3] / m[2][2])
+}
+
+/// First crossing point of two sampled curves: smallest x where
+/// `ya(x) >= yb(x)` flips relative to the start, linearly interpolated.
+/// Used to locate the empirical N̂₀ / N̂₁ intersections of Fig. 2.
+pub fn crossover(xs: &[f64], ya: &[f64], yb: &[f64]) -> Option<f64> {
+    assert_eq!(xs.len(), ya.len());
+    assert_eq!(xs.len(), yb.len());
+    if xs.len() < 2 {
+        return None;
+    }
+    // Establish the initial ordering from the first non-tied sample so
+    // curves that start equal (e.g. both zero at N=0) don't produce a
+    // spurious crossover at the origin.
+    let mut start = 0;
+    while start < xs.len() && ya[start] == yb[start] {
+        start += 1;
+    }
+    if start >= xs.len() {
+        return None;
+    }
+    let sign0 = (ya[start] - yb[start]).signum();
+    for i in start + 1..xs.len() {
+        let diff = ya[i] - yb[i];
+        if diff == 0.0 {
+            return Some(xs[i]);
+        }
+        if diff.signum() != sign0 {
+            // Interpolate between i-1 and i.
+            let d0 = ya[i - 1] - yb[i - 1];
+            let d1 = diff;
+            let t = d0 / (d0 - d1);
+            return Some(xs[i - 1] + t * (xs[i] - xs[i - 1]));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            m.add(x);
+        }
+        assert_eq!(m.count(), 8);
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        assert!((m.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(m.min(), 2.0);
+        assert_eq!(m.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+        // interpolation
+        let xs = [1.0, 2.0];
+        assert!((percentile(&xs, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers() {
+        let xs = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 100.0, 0.0];
+        let tm = trimmed_mean(&xs, 0.1);
+        assert!((tm - 1.0).abs() < 1e-12, "tm={tm}");
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parabola_fit_recovers_quadratic() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.3).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.0 - 2.0 * x + 0.25 * x * x).collect();
+        let (a, b, c) = parabola_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-6, "a={a}");
+        assert!((b + 2.0).abs() < 1e-6, "b={b}");
+        assert!((c - 0.25).abs() < 1e-6, "c={c}");
+    }
+
+    #[test]
+    fn crossover_of_linear_and_quadratic() {
+        // quadratic y = x² vs linear y = 4x cross at x = 4
+        // (the x = 0 tie must be skipped, not reported).
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let quad: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        let lin: Vec<f64> = xs.iter().map(|x| 4.0 * x).collect();
+        let x = crossover(&xs, &quad, &lin).unwrap();
+        assert!((x - 4.0).abs() < 1e-9, "x={x}");
+    }
+
+    #[test]
+    fn crossover_none_when_no_crossing() {
+        let xs = [0.0, 1.0, 2.0];
+        let a = [1.0, 2.0, 3.0];
+        let b = [0.0, 0.5, 1.0];
+        assert_eq!(crossover(&xs, &a, &b), None);
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration: the full serving stack over REAL artifacts — engine +
+//! RegistryExecutor + adaptive variant selection.
+
+use taylorshift::coordinator::batcher::BatchPolicy;
+use taylorshift::coordinator::engine::{Engine, EngineConfig, RegistryExecutor};
+use taylorshift::data::listops::ListOpsGen;
+use taylorshift::data::TaskGenerator;
+use taylorshift::util::rng::Pcg64;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn start_engine(buckets: Vec<usize>) -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    let b = buckets.clone();
+    Some(
+        Engine::start_with(
+            EngineConfig {
+                buckets,
+                head_dim: 16,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(2),
+                },
+                queue_limit: 128,
+                forced_variant: None,
+                selector: taylorshift::attention::selector::Selector::analytical(),
+            },
+            move || RegistryExecutor::new(dir, "serve", &b, &[1, 8]),
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn serves_real_requests_with_adaptive_variants() {
+    let Some(engine) = start_engine(vec![128, 256, 512, 1024]) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let gen_short = ListOpsGen { min_len: 20, max_len: 100, ..Default::default() };
+    let gen_long = ListOpsGen { min_len: 400, max_len: 900, max_args: 8, ..Default::default() };
+    let mut rng = Pcg64::new(1);
+
+    let short = engine.infer(gen_short.generate(&mut rng).tokens).unwrap();
+    assert_eq!(short.bucket, 128);
+    assert_eq!(short.variant, taylorshift::attention::AttentionVariant::Direct);
+    assert_eq!(short.logits.len(), 10);
+    assert!(short.logits.iter().all(|x| x.is_finite()));
+
+    let long = engine.infer(gen_long.generate(&mut rng).tokens).unwrap();
+    assert!(long.bucket >= 512);
+    assert_eq!(long.variant, taylorshift::attention::AttentionVariant::Efficient);
+    assert!(long.logits.iter().all(|x| x.is_finite()));
+
+    let m = engine.metrics();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 2);
+}
+
+#[test]
+fn direct_and_efficient_artifacts_agree_via_engine() {
+    // Same request forced through both variants must produce the same
+    // logits — the interchangeability claim at serving level.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rng = Pcg64::new(2);
+    let gen = ListOpsGen { min_len: 60, max_len: 110, ..Default::default() };
+    let tokens = gen.generate(&mut rng).tokens;
+
+    let mut logits = Vec::new();
+    for variant in [
+        taylorshift::attention::AttentionVariant::Direct,
+        taylorshift::attention::AttentionVariant::Efficient,
+    ] {
+        let d = dir.clone();
+        let engine = Engine::start_with(
+            EngineConfig {
+                buckets: vec![128],
+                head_dim: 16,
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_delay: Duration::ZERO,
+                },
+                queue_limit: 16,
+                forced_variant: Some(variant),
+                selector: taylorshift::attention::selector::Selector::analytical(),
+            },
+            move || RegistryExecutor::new(d, "serve", &[128], &[1, 8]),
+        )
+        .unwrap();
+        logits.push(engine.infer(tokens.clone()).unwrap().logits);
+    }
+    for (a, b) in logits[0].iter().zip(&logits[1]) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn concurrent_load_is_batched() {
+    let Some(engine) = start_engine(vec![128, 256]) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let gen = ListOpsGen { min_len: 20, max_len: 100, ..Default::default() };
+    let mut rng = Pcg64::new(3);
+    let rxs: Vec<_> = (0..24)
+        .map(|_| engine.submit(gen.generate(&mut rng).tokens).unwrap())
+        .collect();
+    let mut max_batch = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    assert!(max_batch > 1, "dynamic batching never fused requests");
+    assert!(engine.metrics().mean_batch_occupancy() > 1.0);
+}

@@ -1,0 +1,179 @@
+//! Integration tests: the three execution paths must agree —
+//!
+//! 1. pure-rust reference (`taylorshift::attention`)
+//! 2. jax-AOT artifacts (jnp and Pallas lowerings) via the registry
+//! 3. rust `XlaBuilder`-emitted executables
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use taylorshift::attention::{self, AttentionVariant};
+use taylorshift::runtime::emitter::{self, EmitVariant};
+use taylorshift::runtime::{literal, Registry, Runtime};
+use taylorshift::tensor::Tensor;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    (
+        Tensor::randn(&[n, d], seed),
+        Tensor::randn(&[n, d], seed + 1),
+        Tensor::randn(&[n, d], seed + 2),
+    )
+}
+
+#[test]
+fn emitter_matches_rust_reference_all_variants() {
+    let rt = Runtime::cpu().unwrap();
+    for (variant, evariant) in [
+        (AttentionVariant::Direct, EmitVariant::TaylorDirect),
+        (AttentionVariant::Efficient, EmitVariant::TaylorEfficient),
+        (AttentionVariant::Softmax, EmitVariant::Softmax),
+    ] {
+        for (n, d) in [(64usize, 8usize), (128, 16), (96, 32)] {
+            let (q, k, v) = qkv(n, d, 42 + n as u64);
+            let exe = emitter::compile_attention(&rt, evariant, n, d, 1.0).unwrap();
+            let got = emitter::run_attention(&exe, &q, &k, &v).unwrap();
+            let want = attention::run_variant(variant, &q, &k, &v, 1.0);
+            assert!(
+                got.allclose(&want, 1e-3, 1e-4),
+                "{variant} n={n} d={d}: max diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn emitter_direct_equals_emitter_efficient() {
+    let rt = Runtime::cpu().unwrap();
+    let (n, d) = (160, 16);
+    let (q, k, v) = qkv(n, d, 7);
+    let dir = emitter::compile_attention(&rt, EmitVariant::TaylorDirect, n, d, 1.5).unwrap();
+    let eff = emitter::compile_attention(&rt, EmitVariant::TaylorEfficient, n, d, 1.5).unwrap();
+    let yd = emitter::run_attention(&dir, &q, &k, &v).unwrap();
+    let ye = emitter::run_attention(&eff, &q, &k, &v).unwrap();
+    assert!(
+        yd.allclose(&ye, 1e-3, 1e-4),
+        "max diff {}",
+        yd.max_abs_diff(&ye)
+    );
+}
+
+#[test]
+fn aot_attention_artifacts_match_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::open(rt, dir).unwrap();
+    for (name, variant) in [
+        ("attn_direct_n256_d16", AttentionVariant::Direct),
+        ("attn_efficient_n256_d16", AttentionVariant::Efficient),
+        ("attn_softmax_n256_d16", AttentionVariant::Softmax),
+        // The Pallas-kernel lowerings must agree too — L1 parity.
+        ("attn_pallas_direct_n256_d16", AttentionVariant::Direct),
+        ("attn_pallas_efficient_n256_d16", AttentionVariant::Efficient),
+        ("attn_pallas_softmax_n256_d16", AttentionVariant::Softmax),
+    ] {
+        let exe = reg.load(name).unwrap();
+        let (q, k, v) = qkv(256, 16, 99);
+        let outputs = exe
+            .run(&[
+                literal::tensor_to_literal(&q).unwrap(),
+                literal::tensor_to_literal(&k).unwrap(),
+                literal::tensor_to_literal(&v).unwrap(),
+            ])
+            .unwrap();
+        let got = literal::literal_to_tensor(&outputs[0]).unwrap();
+        let want = attention::run_variant(variant, &q, &k, &v, 1.0);
+        assert!(
+            got.allclose(&want, 1e-3, 1e-4),
+            "{name}: max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn aot_emitter_cross_parity() {
+    // jax lowering and rust emitter produce the same function.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::open(rt.clone(), dir).unwrap();
+    let (q, k, v) = qkv(1024, 64, 123);
+    let aot = reg.load("attn_efficient_n1024_d64").unwrap();
+    let aot_out = aot
+        .run(&[
+            literal::tensor_to_literal(&q).unwrap(),
+            literal::tensor_to_literal(&k).unwrap(),
+            literal::tensor_to_literal(&v).unwrap(),
+        ])
+        .unwrap();
+    let aot_y = literal::literal_to_tensor(&aot_out[0]).unwrap();
+    let emitted =
+        emitter::compile_attention(&rt, EmitVariant::TaylorEfficient, 1024, 64, 1.0).unwrap();
+    let emit_y = emitter::run_attention(&emitted, &q, &k, &v).unwrap();
+    assert!(
+        aot_y.allclose(&emit_y, 1e-3, 1e-4),
+        "max diff {}",
+        aot_y.max_abs_diff(&emit_y)
+    );
+}
+
+#[test]
+fn registry_lists_and_loads_params() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::open(rt, dir).unwrap();
+    let names = reg.names();
+    assert!(names.len() > 20, "expected many artifacts, got {}", names.len());
+    // Infer artifact params load and match manifest shapes.
+    let infer_names = reg.names_of_kind(taylorshift::runtime::ArtifactKind::Infer);
+    assert!(!infer_names.is_empty());
+    let name = &infer_names[0];
+    let params = reg.load_params(name).unwrap();
+    let exe = reg.load(name).unwrap();
+    assert_eq!(params.len(), exe.io.params.len());
+    for (t, spec) in params.iter().zip(&exe.io.params) {
+        assert_eq!(t.shape(), &spec.shape[..]);
+    }
+}
+
+#[test]
+fn infer_artifact_runs_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::open(rt, dir).unwrap();
+    let name = "serve_efficient_infer_b1_n128";
+    if !reg.contains(name) {
+        eprintln!("skipping: {name} not in manifest");
+        return;
+    }
+    let exe = reg.load(name).unwrap();
+    let params = reg.load_params(name).unwrap();
+    let mut inputs: Vec<xla::Literal> = params
+        .iter()
+        .map(|t| literal::tensor_to_literal(t).unwrap())
+        .collect();
+    let tokens: Vec<Vec<i32>> = vec![(0..128).map(|i| (i % 17) as i32).collect()];
+    inputs.push(literal::tokens_to_literal(&tokens).unwrap());
+    let outputs = exe.run(&inputs).unwrap();
+    assert_eq!(outputs.len(), 1);
+    let logits = literal::literal_to_tensor(&outputs[0]).unwrap();
+    assert_eq!(logits.shape(), &[1, 10]);
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+}
