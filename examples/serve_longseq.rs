@@ -6,17 +6,40 @@
 //! arrivals. Reports latency percentiles, throughput, batch occupancy
 //! and the per-variant split.
 //!
+//! Also demos the **streaming decode** path: a session fed one token at
+//! a time starts on the KV-cache branch and is promoted to the O(1)
+//! recurrent state when its prefix crosses N₀ — the crossover applied
+//! at decode time.
+//!
 //! Run: `cargo run --release --example serve_longseq -- --requests 200`
 //! Flags: --requests N --concurrency C --variant auto|direct|efficient
-//!        --max-delay-ms D --seed S
+//!        --max-delay-ms D --decode-tokens T --seed S
 
 use std::time::{Duration, Instant};
 use taylorshift::coordinator::batcher::BatchPolicy;
-use taylorshift::coordinator::engine::{Engine, EngineConfig, RegistryExecutor};
+use taylorshift::coordinator::engine::{BatchExecutor, Engine, EngineConfig, RegistryExecutor};
+use taylorshift::coordinator::router::Route;
 use taylorshift::data::listops::ListOpsGen;
 use taylorshift::data::TaskGenerator;
+use taylorshift::tensor::Tensor;
 use taylorshift::util::cli::Args;
 use taylorshift::util::rng::Pcg64;
+
+/// Fallback prefill executor so the decode demo runs on a checkout
+/// without `make artifacts` (returns zero logits).
+struct NullPrefill {
+    sizes: Vec<usize>,
+}
+
+impl BatchExecutor for NullPrefill {
+    fn execute(&mut self, _route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(tokens.iter().map(|_| vec![0.0; 10]).collect())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -37,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         queue_limit: 512,
         forced_variant: None,
         selector: taylorshift::attention::selector::Selector::analytical(),
+        ..EngineConfig::default()
     };
     if let Some(v) = args.get("variant") {
         if v != "auto" {
@@ -51,11 +75,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     let dir = args.str_or("artifacts-dir", "artifacts").to_string();
+    let heads = cfg.decode.heads;
+    let head_dim = cfg.head_dim;
     println!("compiling serving executables (one per bucket × variant × batch)...");
     let t0 = Instant::now();
-    let engine = Engine::start_with(cfg, move || {
+    let engine = match Engine::start_with(cfg.clone(), move || {
         RegistryExecutor::new(&dir, "serve", &[128, 256, 512, 1024], &[1, 8])
-    })?;
+    }) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); using a null prefill executor");
+            Engine::start_with(cfg, || Ok(NullPrefill { sizes: vec![1, 8] }))?
+        }
+    };
     println!("engine ready in {:.1}s", t0.elapsed().as_secs_f64());
 
     // Mixed-length load: bursts of short queries + a long-document tail,
@@ -93,7 +125,42 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n=== load complete: {requests} requests in {wall:.2}s ({:.1} req/s) ===\n", requests as f64 / wall);
-    println!("{}", engine.metrics().summary());
+
+    // --- streaming decode: the crossover applied at decode time ---
+    let decode_tokens = args.usize_or("decode-tokens", 1024);
+    println!("\nstreaming {decode_tokens} decode steps through one session...");
+    let sid = engine.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let t0 = Instant::now();
+    for t in 0..decode_tokens {
+        let s = seed.wrapping_mul(1000) + t as u64;
+        let q = Tensor::randn(&[heads, head_dim], s);
+        let k = Tensor::randn(&[heads, head_dim], s + 1);
+        let v = Tensor::randn(&[heads, head_dim], s + 2);
+        let resp = engine
+            .decode_step(sid, q, k, v)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if resp.promoted {
+            println!(
+                "  prefix {} crossed N0 → promoted KV cache to recurrent state",
+                resp.step
+            );
+        }
+    }
+    let decode_wall = t0.elapsed().as_secs_f64();
+    let stats = engine
+        .close_stream(sid)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "decoded {} tokens in {decode_wall:.2}s ({:.0} tok/s), final branch {:?}, \
+         state {} bytes, promoted at {:?}",
+        stats.tokens,
+        stats.tokens as f64 / decode_wall,
+        stats.branch,
+        stats.bytes,
+        stats.promoted_at,
+    );
+
+    println!("\n{}", engine.metrics().summary());
     println!(
         "\nadaptive crossover N0(16)≈{:.0}: buckets ≤256 → direct, ≥512 → efficient",
         taylorshift::attention::selector::Selector::analytical().crossover(16)

@@ -1,0 +1,105 @@
+//! Streaming decode: per-token latency vs prefix length.
+//!
+//! The claim under test is the decode-time version of the paper's
+//! complexity shift: the KV-cache branch pays O(N·d) per token (it
+//! re-attends over the whole prefix), while the recurrent branch pays
+//! O(d³) — *independent of N*. The bench sweeps prefix lengths from 256
+//! to 8192 and verifies the recurrent per-token time stays flat
+//! (≤1.5× from the shortest to the longest prefix) while KV grows.
+//!
+//! Run: `cargo bench --bench decode_stream`  (TS_BENCH_QUICK=1 to smoke)
+
+use std::time::Instant;
+use taylorshift::bench_support::{bench, fmt_seconds, write_json, BenchConfig, Table};
+use taylorshift::decode::{KvCache, RecurrentState};
+use taylorshift::tensor::Tensor;
+use taylorshift::util::json::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("TS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (d, tau) = (16usize, 1.0f32);
+    let lengths: &[usize] = if quick {
+        &[256, 1024]
+    } else {
+        &[256, 512, 1024, 2048, 4096, 8192]
+    };
+
+    let mut table = Table::new(&["prefix N", "kv per-token", "recurrent per-token", "kv/rec"]);
+    let mut series = Vec::new();
+    let mut rec_means = Vec::new();
+
+    for &n in lengths {
+        // Build both branches' state over an n-token prefix.
+        let k = Tensor::randn(&[n, d], 1);
+        let v = Tensor::randn(&[n, d], 2);
+        let mut kv = KvCache::new(d, tau);
+        let mut rec = RecurrentState::new(d, tau);
+        for t in 0..n {
+            kv.append(k.row(t), v.row(t));
+            rec.append(k.row(t), v.row(t));
+        }
+        let q = Tensor::randn(&[1, d], 3);
+
+        // KV is timed query-only at the fixed prefix (appending inside
+        // the loop would grow the cache and drift the measurement; the
+        // O(d) append is negligible against the O(N·d) query anyway).
+        let t_kv = bench(format!("kv_n{n}"), &cfg, || {
+            std::hint::black_box(kv.query(q.row(0)));
+        });
+        // Recurrent state is length-independent, so the full step
+        // (append + query) is timed; growth across iterations is free.
+        let kq = Tensor::randn(&[1, d], 4);
+        let kv_tok = Tensor::randn(&[1, d], 5);
+        let t_rec = bench(format!("recurrent_n{n}"), &cfg, || {
+            std::hint::black_box(rec.decode_step(q.row(0), kq.row(0), kv_tok.row(0)));
+        });
+
+        table.row(&[
+            format!("{n}"),
+            fmt_seconds(t_kv.mean_s),
+            fmt_seconds(t_rec.mean_s),
+            format!("{:.2}", t_kv.mean_s / t_rec.mean_s),
+        ]);
+        rec_means.push(t_rec.mean_s);
+        series.push(Json::from_pairs(vec![
+            ("n", Json::Num(n as f64)),
+            ("kv_mean_s", Json::Num(t_kv.mean_s)),
+            ("recurrent_mean_s", Json::Num(t_rec.mean_s)),
+        ]));
+    }
+
+    table.print();
+
+    // One-time promotion cost (the O(N) state build at the crossover).
+    let n = if quick { 1024 } else { 4096 };
+    let k = Tensor::randn(&[n, d], 6);
+    let v = Tensor::randn(&[n, d], 7);
+    let mut session = taylorshift::decode::DecodeSession::new(1, d, tau, false);
+    for t in 0..n {
+        let row = |src: &Tensor, t: usize| Tensor::new(&[1, d], src.row(t).to_vec());
+        session.step(&row(&k, t), &row(&k, t), &row(&v, t), None);
+    }
+    let t0 = Instant::now();
+    let promoted = session.promote();
+    println!(
+        "\none-time KV→recurrent promotion at N={n}: {} (promoted={promoted})",
+        fmt_seconds(t0.elapsed().as_secs_f64())
+    );
+
+    let flat_ratio = rec_means.last().unwrap() / rec_means.first().unwrap();
+    println!(
+        "recurrent per-token flatness N={}→N={}: {:.2}x (target ≤1.5x)",
+        lengths.first().unwrap(),
+        lengths.last().unwrap(),
+        flat_ratio
+    );
+
+    write_json(
+        "decode_stream",
+        &Json::from_pairs(vec![
+            ("series", Json::Arr(series)),
+            ("recurrent_flat_ratio", Json::Num(flat_ratio)),
+        ]),
+    );
+}

@@ -15,6 +15,22 @@ pub fn ops_efficient(n: u64, d: u64) -> u64 {
     n * (4 * d * d * d + 10 * d * d + 9 * d + 4)
 }
 
+/// Per-token decode FLOPs on the KV-cache (direct) path at prefix
+/// length `n`: score every cached key (`2d+3` each: dot, Taylor poly),
+/// accumulate the weighted values (`2d` each), plus the query
+/// normalization and output rescale (`~3d`). Linear in `n`.
+pub fn ops_decode_kv(n: u64, d: u64) -> u64 {
+    n * (4 * d + 3) + 3 * d
+}
+
+/// Per-token decode FLOPs on the recurrent path, independent of the
+/// prefix: a rank-1 moment update plus a full moment contraction, each
+/// `2d²(d+1)` for M₂ with lower-order M₁/M₀ terms — `4(d+1)(d²+d+1)`
+/// total plus `~6d` for normalizations.
+pub fn ops_decode_recurrent(d: u64) -> u64 {
+    4 * (d + 1) * (d * d + d + 1) + 6 * d
+}
+
 /// FLOPs of standard softmax attention. The paper notes (§4.1, Fig. 2)
 /// that softmax attention is "slightly higher" than direct-TaylorShift:
 /// the only difference is evaluating `exp` instead of `½x²+x+1` on the
@@ -112,6 +128,28 @@ mod tests {
         let d = 32;
         let base = ops_direct(1000, d);
         assert_eq!(ops_direct(2000, d), 4 * base);
+    }
+
+    #[test]
+    fn decode_costs_mirror_the_crossover() {
+        let d = 16u64;
+        // Recurrent cost is a constant; KV cost grows linearly, so the
+        // two cross at some prefix length — the decode-time analogue of
+        // the N0 speed crossover.
+        let flat = ops_decode_recurrent(d);
+        assert!(ops_decode_kv(16, d) < flat, "short prefixes favor KV");
+        let mut crossed = false;
+        for n in 1..100_000u64 {
+            if ops_decode_kv(n, d) > flat {
+                crossed = true;
+                break;
+            }
+        }
+        assert!(crossed, "KV decode cost never crossed the recurrent cost");
+        // Linearity in n.
+        let a = ops_decode_kv(1000, d) - 3 * d;
+        let b = ops_decode_kv(2000, d) - 3 * d;
+        assert_eq!(b, 2 * a);
     }
 
     #[test]

@@ -24,6 +24,18 @@ pub fn entries_softmax(n: u64, d: u64) -> u64 {
     entries_direct(n, d)
 }
 
+/// Entries held per head by a streaming KV cache at prefix length `n`:
+/// `dN` normalized keys + `dN` raw values (decode-time direct branch).
+pub fn entries_decode_kv(n: u64, d: u64) -> u64 {
+    2 * n * d
+}
+
+/// Entries held per head by the recurrent decode state, independent of
+/// the prefix length: `(d+1)` (M₀) + `d(d+1)` (M₁) + `d²(d+1)` (M₂).
+pub fn entries_decode_recurrent(d: u64) -> u64 {
+    (d + 1) * (1 + d + d * d)
+}
+
 /// Convert an entry count to bytes at the given element width.
 pub fn bytes(entries: u64, bytes_per_elem: u64) -> u64 {
     entries * bytes_per_elem
@@ -64,6 +76,26 @@ mod tests {
                 "d={d} below={below}"
             );
         }
+    }
+
+    #[test]
+    fn decode_state_crossover() {
+        // The recurrent state is length-free; the KV cache is linear in
+        // N, so past some prefix the recurrent state is strictly
+        // smaller even accounting for its f64 entries.
+        for d in [4u64, 16, 64] {
+            let recurrent = bytes(entries_decode_recurrent(d), 8);
+            let mut crossed = false;
+            for n in 1..=8192u64 {
+                if bytes(entries_decode_kv(n, d), 4) > recurrent {
+                    crossed = true;
+                    break;
+                }
+            }
+            assert!(crossed, "d={d}: KV never exceeded recurrent state");
+        }
+        assert_eq!(entries_decode_kv(10, 16), 320);
+        assert_eq!(entries_decode_recurrent(16), 17 * (1 + 16 + 256));
     }
 
     #[test]

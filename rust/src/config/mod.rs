@@ -84,6 +84,19 @@ impl ServerConfig {
                 ),
             };
         }
+        // Streaming-decode knobs (all optional; see decode::DecodeConfig).
+        if let Some(v) = j.get("decode_heads").and_then(|x| x.as_usize()) {
+            engine.decode.heads = v;
+        }
+        if let Some(v) = j.get("decode_tau").and_then(|x| x.as_f64()) {
+            engine.decode.tau = v as f32;
+        }
+        if let Some(v) = j.get("session_budget_mib").and_then(|x| x.as_f64()) {
+            engine.decode.max_session_bytes = (v * 1024.0 * 1024.0) as u64;
+        }
+        if let Some(v) = j.get("max_sessions").and_then(|x| x.as_usize()) {
+            engine.decode.max_sessions = v;
+        }
         cfg.engine = engine;
         Ok(cfg)
     }
@@ -133,6 +146,24 @@ mod tests {
             c.engine.forced_variant,
             Some(crate::attention::AttentionVariant::Efficient)
         );
+    }
+
+    #[test]
+    fn parses_decode_knobs() {
+        let j = Json::parse(
+            r#"{
+                "decode_heads": 8,
+                "decode_tau": 1.5,
+                "session_budget_mib": 2.0,
+                "max_sessions": 7
+            }"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.engine.decode.heads, 8);
+        assert!((c.engine.decode.tau - 1.5).abs() < 1e-6);
+        assert_eq!(c.engine.decode.max_session_bytes, 2 << 20);
+        assert_eq!(c.engine.decode.max_sessions, 7);
     }
 
     #[test]

@@ -168,6 +168,53 @@ impl DynamicBatcher {
     }
 }
 
+/// Priority lane for streaming decode steps, drained by the engine
+/// ahead of due prefill batches each drive cycle.
+///
+/// Decode steps are O(1)-ish units on the hot serving path: making a
+/// token wait behind a whole prefill batch wrecks per-token latency,
+/// but letting an unbounded decode burst starve prefill wrecks
+/// throughput. The lane resolves the mix: FIFO within decode, at most
+/// `max_per_cycle` steps run before the engine services due batches,
+/// and anything left keeps the engine's poll timeout at zero so the
+/// remainder runs on the immediately following cycle.
+pub struct DecodeLane<T> {
+    items: std::collections::VecDeque<T>,
+    max_per_cycle: usize,
+}
+
+impl<T> DecodeLane<T> {
+    pub fn new(max_per_cycle: usize) -> Self {
+        Self {
+            items: std::collections::VecDeque::new(),
+            max_per_cycle: max_per_cycle.max(1),
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.items.push_back(item);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Up to `max_per_cycle` steps, FIFO.
+    pub fn drain_cycle(&mut self) -> Vec<T> {
+        let take = self.items.len().min(self.max_per_cycle);
+        self.items.drain(..take).collect()
+    }
+
+    /// Everything, FIFO (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.items.drain(..).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +356,28 @@ mod tests {
                 flushed.iter().all(|b| b.requests.len() <= 4)
             },
         );
+    }
+
+    #[test]
+    fn decode_lane_bounds_each_cycle_and_keeps_fifo() {
+        let mut lane = DecodeLane::new(3);
+        for i in 0..8u64 {
+            lane.push(i);
+        }
+        assert_eq!(lane.pending(), 8);
+        assert_eq!(lane.drain_cycle(), vec![0, 1, 2]);
+        assert_eq!(lane.drain_cycle(), vec![3, 4, 5]);
+        assert_eq!(lane.pending(), 2);
+        assert_eq!(lane.drain_all(), vec![6, 7]);
+        assert!(lane.is_empty());
+        assert!(lane.drain_cycle().is_empty());
+    }
+
+    #[test]
+    fn decode_lane_cycle_cap_is_at_least_one() {
+        let mut lane = DecodeLane::new(0);
+        lane.push(1u64);
+        assert_eq!(lane.drain_cycle(), vec![1]);
     }
 
     #[test]

@@ -7,14 +7,26 @@
 //! The executor is pluggable ([`BatchExecutor`]): production uses
 //! [`RegistryExecutor`] over the AOT artifacts; tests inject mocks to
 //! exercise the full request lifecycle without artifacts.
+//!
+//! Besides batched prefill/classification, the engine serves **streaming
+//! decode** (see `decode/`): `submit_stream` opens a per-session state
+//! cache on the engine thread, `decode_step` feeds one token's q/k/v and
+//! returns the attention output for the full prefix in O(1) (recurrent
+//! branch) or O(n) (KV branch) — the session store promotes KV→recurrent
+//! when the prefix crosses the selector's N₀. Decode steps ride a
+//! priority lane mixed ahead of due prefill batches each cycle.
 
 use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, PendingBatch};
+use crate::coordinator::batcher::{BatchPolicy, DecodeLane, DynamicBatcher, PendingBatch};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferRequest, InferResponse, RequestError};
+use crate::coordinator::request::{
+    DecodeRequest, DecodeResponse, InferRequest, InferResponse, RequestError, StreamStats,
+};
 use crate::coordinator::router::{Route, Router};
 use crate::data::batch::Buckets;
+use crate::decode::{DecodeConfig, SessionStore};
+use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -49,6 +61,9 @@ pub struct EngineConfig {
     /// Crossover policy (analytical N₀ by default; load a measured one
     /// via `Selector::from_json_file` — see `examples/crossover_sweep`).
     pub selector: Selector,
+    /// Streaming-decode subsystem: session memory budget, per-head
+    /// config, decode/prefill mixing (see `decode::DecodeConfig`).
+    pub decode: DecodeConfig,
 }
 
 impl Default for EngineConfig {
@@ -60,12 +75,16 @@ impl Default for EngineConfig {
             queue_limit: 256,
             forced_variant: None,
             selector: Selector::analytical(),
+            decode: DecodeConfig::default(),
         }
     }
 }
 
 enum Msg {
     Infer(InferRequest, Sender<Result<InferResponse, RequestError>>),
+    StreamOpen(u64, Sender<Result<u64, RequestError>>),
+    Decode(DecodeRequest, DecodeResponder),
+    StreamClose(u64, Sender<Result<StreamStats, RequestError>>),
     Shutdown,
 }
 
@@ -77,6 +96,9 @@ pub struct Engine {
     in_flight: Arc<AtomicUsize>,
     queue_limit: usize,
     next_id: AtomicU64,
+    next_stream: AtomicU64,
+    /// Expected decode input shape, `[heads, head_dim]`.
+    decode_shape: [usize; 2],
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -120,6 +142,8 @@ impl Engine {
             in_flight,
             queue_limit: config.queue_limit,
             next_id: AtomicU64::new(1),
+            next_stream: AtomicU64::new(1),
+            decode_shape: [config.decode.heads, config.head_dim],
             worker: Some(worker),
         })
     }
@@ -154,6 +178,64 @@ impl Engine {
         rx.recv().map_err(|_| RequestError::Shutdown)?
     }
 
+    /// Open a streaming decode session; returns its id. The session is
+    /// resident on the engine thread until `close_stream` or LRU
+    /// eviction under the configured memory budget.
+    pub fn submit_stream(&self) -> Result<u64, RequestError> {
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::StreamOpen(id, resp_tx))
+            .map_err(|_| RequestError::Shutdown)?;
+        resp_rx.recv().map_err(|_| RequestError::Shutdown)?
+    }
+
+    /// Submit one decode step (the new token's per-head q/k/v, each
+    /// `[heads, head_dim]`); the returned receiver yields the attention
+    /// output over the full prefix.
+    pub fn submit_decode(
+        &self,
+        session: u64,
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+    ) -> Result<Receiver<Result<DecodeResponse, RequestError>>, RequestError> {
+        for t in [&q, &k, &v] {
+            if t.shape() != self.decode_shape.as_slice() {
+                return Err(RequestError::BadDecodeShape {
+                    expected: self.decode_shape,
+                    got: t.shape().to_vec(),
+                });
+            }
+        }
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::Decode(DecodeRequest::new(session, q, k, v), resp_tx))
+            .map_err(|_| RequestError::Shutdown)?;
+        Ok(resp_rx)
+    }
+
+    /// Submit a decode step and block for its output.
+    pub fn decode_step(
+        &self,
+        session: u64,
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+    ) -> Result<DecodeResponse, RequestError> {
+        let rx = self.submit_decode(session, q, k, v)?;
+        rx.recv().map_err(|_| RequestError::Shutdown)?
+    }
+
+    /// Close a stream and free its state; returns lifetime stats.
+    pub fn close_stream(&self, session: u64) -> Result<StreamStats, RequestError> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::StreamClose(session, resp_tx))
+            .map_err(|_| RequestError::Shutdown)?;
+        resp_rx.recv().map_err(|_| RequestError::Shutdown)?
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -173,6 +255,7 @@ impl Drop for Engine {
 }
 
 type Responder = Sender<Result<InferResponse, RequestError>>;
+type DecodeResponder = Sender<Result<DecodeResponse, RequestError>>;
 
 fn engine_loop<E: BatchExecutor>(
     config: EngineConfig,
@@ -192,16 +275,43 @@ fn engine_loop<E: BatchExecutor>(
     let mut batcher = DynamicBatcher::new(config.policy);
     // ResponderId → waiting channel. Ids are request ids.
     let mut waiters: std::collections::HashMap<u64, Responder> = Default::default();
+    // Streaming decode: session state lives here, on the engine thread.
+    let mut store = SessionStore::new(
+        config.decode.clone(),
+        config.head_dim,
+        config.selector.clone(),
+        config.forced_variant,
+    );
+    let mut lane: DecodeLane<(DecodeRequest, DecodeResponder)> =
+        DecodeLane::new(config.decode.max_steps_per_cycle);
 
     const IDLE: Duration = Duration::from_millis(50);
-    loop {
-        let timeout = batcher
-            .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(IDLE);
+    let mut shutdown = false;
+    while !shutdown {
+        // Leftover decode work ⇒ poll without sleeping; otherwise wake
+        // for the next batch deadline.
+        let timeout = if lane.is_empty() {
+            batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(IDLE)
+        } else {
+            Duration::ZERO
+        };
+        // Block for one message, then slurp everything already queued so
+        // a cycle sees the full pending mix of prefill and decode.
+        let mut msgs: Vec<Msg> = Vec::new();
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Infer(req, responder)) => {
-                match router.route(req.tokens.len()) {
+            Ok(m) => msgs.push(m),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        for msg in msgs {
+            match msg {
+                Msg::Infer(req, responder) => match router.route(req.tokens.len()) {
                     Ok(route) => {
                         let id = req.id;
                         waiters.insert(id, responder);
@@ -215,22 +325,102 @@ fn engine_loop<E: BatchExecutor>(
                         in_flight.fetch_sub(1, Ordering::Relaxed);
                         let _ = responder.send(Err(e));
                     }
+                },
+                Msg::StreamOpen(id, responder) => {
+                    let evicted = store.open(id);
+                    metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .sessions_evicted
+                        .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+                    update_session_gauges(&store, &metrics);
+                    let _ = responder.send(Ok(id));
                 }
+                Msg::Decode(req, responder) => lane.push((req, responder)),
+                Msg::StreamClose(id, responder) => {
+                    let result = match store.close(id) {
+                        Some(s) => {
+                            metrics.streams_closed.fetch_add(1, Ordering::Relaxed);
+                            Ok(StreamStats {
+                                session: id,
+                                tokens: s.tokens,
+                                branch: s.branch,
+                                bytes: s.bytes,
+                                promoted_at: s.promoted_at,
+                            })
+                        }
+                        None => Err(RequestError::UnknownSession { id }),
+                    };
+                    update_session_gauges(&store, &metrics);
+                    let _ = responder.send(result);
+                }
+                Msg::Shutdown => shutdown = true,
             }
-            Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // Decode steps run ahead of due batches, bounded per cycle so a
+        // decode burst cannot starve prefill.
+        for (req, responder) in lane.drain_cycle() {
+            run_decode(&mut store, req, responder, &metrics);
         }
         for batch in batcher.flush_due(Instant::now()) {
             run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
         }
     }
     // Drain on shutdown: execute what's queued so no request hangs.
+    for (req, responder) in lane.drain_all() {
+        run_decode(&mut store, req, responder, &metrics);
+    }
     for batch in batcher.flush_all() {
         run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
     }
     for (_, responder) in waiters.drain() {
         let _ = responder.send(Err(RequestError::Shutdown));
+    }
+}
+
+fn update_session_gauges(store: &SessionStore, metrics: &Metrics) {
+    metrics
+        .sessions_resident
+        .store(store.len() as u64, Ordering::Relaxed);
+    metrics
+        .session_bytes
+        .store(store.resident_bytes(), Ordering::Relaxed);
+}
+
+/// Serve one decode step from the session store and record metrics.
+fn run_decode(
+    store: &mut SessionStore,
+    req: DecodeRequest,
+    responder: DecodeResponder,
+    metrics: &Metrics,
+) {
+    // Metrics/gauges are updated BEFORE the response is sent so a
+    // blocking caller observes a consistent snapshot on return.
+    match store.step(req.session, &req.q, &req.k, &req.v) {
+        Some(outcome) => {
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            if outcome.result.promoted {
+                metrics.promotions.fetch_add(1, Ordering::Relaxed);
+            }
+            metrics
+                .sessions_evicted
+                .fetch_add(outcome.evicted.len() as u64, Ordering::Relaxed);
+            let latency = req.enqueued_at.elapsed();
+            metrics.decode_latency.record(latency);
+            update_session_gauges(store, metrics);
+            let _ = responder.send(Ok(DecodeResponse {
+                session: req.session,
+                step: outcome.result.len,
+                output: outcome.result.output,
+                branch: outcome.result.branch,
+                promoted: outcome.result.promoted,
+                latency,
+            }));
+        }
+        None => {
+            metrics.decode_misses.fetch_add(1, Ordering::Relaxed);
+            update_session_gauges(store, metrics);
+            let _ = responder.send(Err(RequestError::UnknownSession { id: req.session }));
+        }
     }
 }
 
@@ -615,5 +805,159 @@ mod tests {
         drop(engine); // shutdown must flush, not orphan
         let result = rx.recv().unwrap();
         assert!(result.is_ok(), "drained on shutdown: {result:?}");
+    }
+
+    // --- streaming decode ---
+
+    #[test]
+    fn decode_stream_parity_and_promotion() {
+        let (heads, d, tau) = (2usize, 16usize, 1.0f32);
+        // Calibrated crossover at N₀=8 so the session starts on the KV
+        // branch and promotes mid-stream.
+        let (engine, _) = mock_engine(EngineConfig {
+            head_dim: d,
+            selector: Selector::calibrated(vec![(d, 8.0)]),
+            decode: DecodeConfig {
+                heads,
+                tau,
+                ..DecodeConfig::default()
+            },
+            ..Default::default()
+        });
+        let sid = engine.submit_stream().unwrap();
+        // Per-head history for full-prefix reference recomputation.
+        let mut hist: Vec<[Vec<f32>; 3]> =
+            (0..heads).map(|_| [vec![], vec![], vec![]]).collect();
+        let steps = 20;
+        for t in 0..steps {
+            let q = Tensor::randn(&[heads, d], 100 + t as u64);
+            let k = Tensor::randn(&[heads, d], 200 + t as u64);
+            let v = Tensor::randn(&[heads, d], 300 + t as u64);
+            let resp = engine
+                .decode_step(sid, q.clone(), k.clone(), v.clone())
+                .unwrap();
+            assert_eq!(resp.step, t + 1);
+            assert_eq!(resp.promoted, t + 1 == 8, "promotion exactly at N₀");
+            let expect_branch = if t + 1 < 8 {
+                AttentionVariant::Direct
+            } else {
+                AttentionVariant::Efficient
+            };
+            assert_eq!(resp.branch, expect_branch, "step {}", t + 1);
+            assert_eq!(resp.output.len(), heads * d);
+            for h in 0..heads {
+                hist[h][0].extend_from_slice(q.row(h));
+                hist[h][1].extend_from_slice(k.row(h));
+                hist[h][2].extend_from_slice(v.row(h));
+                let n = t + 1;
+                let qh = Tensor::new(&[n, d], hist[h][0].clone());
+                let kh = Tensor::new(&[n, d], hist[h][1].clone());
+                let vh = Tensor::new(&[n, d], hist[h][2].clone());
+                let reference = crate::attention::run_variant(resp.branch, &qh, &kh, &vh, tau);
+                let got = &resp.output[h * d..(h + 1) * d];
+                let want = reference.row(n - 1);
+                let err = got
+                    .iter()
+                    .zip(want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(err < 1e-4, "step {} head {h}: max err {err}", t + 1);
+            }
+        }
+        let m = engine.metrics();
+        assert_eq!(m.decode_steps.load(Ordering::Relaxed), steps as u64);
+        assert_eq!(m.promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.streams_opened.load(Ordering::Relaxed), 1);
+        assert_eq!(m.decode_latency.count(), steps as u64);
+        assert!(m.sessions_resident.load(Ordering::Relaxed) == 1);
+        assert!(m.session_bytes.load(Ordering::Relaxed) > 0);
+
+        let stats = engine.close_stream(sid).unwrap();
+        assert_eq!(stats.tokens, steps);
+        assert_eq!(stats.branch, AttentionVariant::Efficient);
+        assert_eq!(stats.promoted_at, Some(8));
+        assert_eq!(m.streams_closed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_resident.load(Ordering::Relaxed), 0);
+        // Double close and post-close decode both miss.
+        assert!(matches!(
+            engine.close_stream(sid),
+            Err(RequestError::UnknownSession { .. })
+        ));
+        let q = Tensor::randn(&[heads, d], 1);
+        let err = engine.decode_step(sid, q.clone(), q.clone(), q).unwrap_err();
+        assert!(matches!(err, RequestError::UnknownSession { .. }));
+        assert_eq!(m.decode_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn decode_shape_validated_at_submit() {
+        let (engine, _) = mock_engine(EngineConfig::default()); // heads=4, d=16
+        let bad = Tensor::randn(&[2, 16], 1);
+        let err = engine
+            .submit_decode(1, bad.clone(), bad.clone(), bad)
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            RequestError::BadDecodeShape {
+                expected: [4, 16],
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn stream_capacity_evicts_lru() {
+        let (engine, _) = mock_engine(EngineConfig {
+            decode: DecodeConfig {
+                heads: 1,
+                max_sessions: 1,
+                ..DecodeConfig::default()
+            },
+            ..Default::default()
+        });
+        let s1 = engine.submit_stream().unwrap();
+        let mk = |seed| Tensor::randn(&[1, 16], seed);
+        engine.decode_step(s1, mk(1), mk(2), mk(3)).unwrap();
+        let s2 = engine.submit_stream().unwrap();
+        // s1 was evicted to make room for s2.
+        let err = engine.decode_step(s1, mk(4), mk(5), mk(6)).unwrap_err();
+        assert!(matches!(err, RequestError::UnknownSession { .. }));
+        engine.decode_step(s2, mk(7), mk(8), mk(9)).unwrap();
+        let m = engine.metrics();
+        assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 1);
+        assert_eq!(m.streams_opened.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn decode_mixes_with_prefill() {
+        let (engine, _) = mock_engine(EngineConfig {
+            decode: DecodeConfig {
+                heads: 1,
+                ..DecodeConfig::default()
+            },
+            ..Default::default()
+        });
+        let sid = engine.submit_stream().unwrap();
+        let mut decode_rxs = Vec::new();
+        let mut infer_rxs = Vec::new();
+        for t in 0..5u64 {
+            let mk = |seed| Tensor::randn(&[1, 16], seed);
+            decode_rxs.push(
+                engine
+                    .submit_decode(sid, mk(t), mk(10 + t), mk(20 + t))
+                    .unwrap(),
+            );
+            infer_rxs.push(engine.submit(vec![1; 50]).unwrap());
+        }
+        for rx in decode_rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        for rx in infer_rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let m = engine.metrics();
+        assert_eq!(m.decode_steps.load(Ordering::Relaxed), 5);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(engine.close_stream(sid).unwrap().tokens, 5);
     }
 }

@@ -87,6 +87,25 @@ pub struct Metrics {
     pub exec_time: LatencyHistogram,
     /// Per-variant request counts [direct, efficient, softmax].
     pub variant_counts: [AtomicU64; 3],
+    // --- streaming decode (see `decode/`) ---
+    /// Streams opened via `submit_stream`.
+    pub streams_opened: AtomicU64,
+    /// Streams closed via `close_stream`.
+    pub streams_closed: AtomicU64,
+    /// Decode steps served from resident session state (cache hits).
+    pub decode_steps: AtomicU64,
+    /// Decode steps that missed (session unknown/closed/evicted).
+    pub decode_misses: AtomicU64,
+    /// KV→recurrent promotions at the crossover.
+    pub promotions: AtomicU64,
+    /// Sessions LRU-evicted under the memory budget.
+    pub sessions_evicted: AtomicU64,
+    /// Gauge: sessions currently resident in the store.
+    pub sessions_resident: AtomicU64,
+    /// Gauge: bytes held by resident session state.
+    pub session_bytes: AtomicU64,
+    /// Per-token decode latency (submit → response).
+    pub decode_latency: LatencyHistogram,
 }
 
 impl Metrics {
@@ -112,15 +131,19 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
     }
 
-    /// Human-readable summary block.
+    /// Human-readable summary block: one report covering the batch
+    /// path, the per-variant split, and the streaming-decode state.
     pub fn summary(&self) -> String {
         format!(
             "requests: submitted={} completed={} rejected={}\n\
              batches: executed={} mean_occupancy={:.2} padding_rows={}\n\
              variants: direct={} efficient={} softmax={}\n\
+             decode: steps={} misses={} promotions={}\n\
+             sessions: opened={} closed={} evicted={} resident={} bytes={}\n\
              latency: mean={:?} p50={:?} p99={:?}\n\
              queue_wait: mean={:?} p99={:?}\n\
-             exec: mean={:?} p99={:?}",
+             exec: mean={:?} p99={:?}\n\
+             decode_latency: mean={:?} p50={:?} p99={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -130,6 +153,14 @@ impl Metrics {
             self.variant_counts[0].load(Ordering::Relaxed),
             self.variant_counts[1].load(Ordering::Relaxed),
             self.variant_counts[2].load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.decode_misses.load(Ordering::Relaxed),
+            self.promotions.load(Ordering::Relaxed),
+            self.streams_opened.load(Ordering::Relaxed),
+            self.streams_closed.load(Ordering::Relaxed),
+            self.sessions_evicted.load(Ordering::Relaxed),
+            self.sessions_resident.load(Ordering::Relaxed),
+            self.session_bytes.load(Ordering::Relaxed),
             self.latency.mean(),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
@@ -137,7 +168,72 @@ impl Metrics {
             self.queue_wait.quantile(0.99),
             self.exec_time.mean(),
             self.exec_time.quantile(0.99),
+            self.decode_latency.mean(),
+            self.decode_latency.quantile(0.5),
+            self.decode_latency.quantile(0.99),
         )
+    }
+
+    /// Machine-readable snapshot for benches and the server.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let hist = |h: &LatencyHistogram| {
+            Json::from_pairs(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("mean_us", Json::Num(h.mean().as_micros() as f64)),
+                ("p50_us", Json::Num(h.quantile(0.5).as_micros() as f64)),
+                ("p99_us", Json::Num(h.quantile(0.99).as_micros() as f64)),
+            ])
+        };
+        Json::from_pairs(vec![
+            (
+                "requests",
+                Json::from_pairs(vec![
+                    ("submitted", n(&self.submitted)),
+                    ("completed", n(&self.completed)),
+                    ("rejected", n(&self.rejected)),
+                ]),
+            ),
+            (
+                "batches",
+                Json::from_pairs(vec![
+                    ("executed", n(&self.batches_executed)),
+                    ("mean_occupancy", Json::Num(self.mean_batch_occupancy())),
+                    ("padding_rows", n(&self.padding_rows)),
+                ]),
+            ),
+            (
+                "variants",
+                Json::from_pairs(vec![
+                    ("direct", n(&self.variant_counts[0])),
+                    ("efficient", n(&self.variant_counts[1])),
+                    ("softmax", n(&self.variant_counts[2])),
+                ]),
+            ),
+            (
+                "decode",
+                Json::from_pairs(vec![
+                    ("steps", n(&self.decode_steps)),
+                    ("misses", n(&self.decode_misses)),
+                    ("promotions", n(&self.promotions)),
+                ]),
+            ),
+            (
+                "sessions",
+                Json::from_pairs(vec![
+                    ("opened", n(&self.streams_opened)),
+                    ("closed", n(&self.streams_closed)),
+                    ("evicted", n(&self.sessions_evicted)),
+                    ("resident", n(&self.sessions_resident)),
+                    ("bytes", n(&self.session_bytes)),
+                ]),
+            ),
+            ("latency", hist(&self.latency)),
+            ("queue_wait", hist(&self.queue_wait)),
+            ("exec", hist(&self.exec_time)),
+            ("decode_latency", hist(&self.decode_latency)),
+        ])
     }
 }
 
@@ -180,5 +276,55 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("submitted=17"));
         assert!(s.contains("efficient=1"));
+    }
+
+    #[test]
+    fn summary_is_one_report_with_decode_counters() {
+        let m = Metrics::new();
+        m.record_variant(crate::attention::AttentionVariant::Direct);
+        m.decode_steps.store(9, Ordering::Relaxed);
+        m.promotions.store(2, Ordering::Relaxed);
+        m.sessions_resident.store(3, Ordering::Relaxed);
+        m.session_bytes.store(4096, Ordering::Relaxed);
+        m.decode_latency.record(Duration::from_micros(50));
+        let s = m.summary();
+        for needle in [
+            "direct=1",
+            "steps=9",
+            "promotions=2",
+            "resident=3",
+            "bytes=4096",
+            "decode_latency:",
+        ] {
+            assert!(s.contains(needle), "summary missing {needle:?}:\n{s}");
+        }
+    }
+
+    #[test]
+    fn to_json_roundtrips() {
+        let m = Metrics::new();
+        m.submitted.store(5, Ordering::Relaxed);
+        m.decode_steps.store(7, Ordering::Relaxed);
+        m.sessions_evicted.store(1, Ordering::Relaxed);
+        m.latency.record(Duration::from_millis(3));
+        let text = m.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("requests").and_then(|r| r.get("submitted")).and_then(|x| x.as_f64()),
+            Some(5.0)
+        );
+        assert_eq!(
+            parsed.get("decode").and_then(|r| r.get("steps")).and_then(|x| x.as_f64()),
+            Some(7.0)
+        );
+        assert_eq!(
+            parsed.get("sessions").and_then(|r| r.get("evicted")).and_then(|x| x.as_f64()),
+            Some(1.0)
+        );
+        let count = parsed
+            .get("latency")
+            .and_then(|r| r.get("count"))
+            .and_then(|x| x.as_f64());
+        assert_eq!(count, Some(1.0));
     }
 }

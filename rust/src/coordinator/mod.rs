@@ -18,6 +18,12 @@
 //! same function with the same parameters, the router can switch per
 //! bucket with zero accuracy cost — Section 6's closing argument,
 //! realized as a scheduling policy.
+//!
+//! The same crossover logic drives the **streaming decode** path
+//! (`decode/`): `Engine::submit_stream` + `Engine::decode_step` serve
+//! per-token attention from resident session state (KV cache below N₀,
+//! recurrent moments above it), mixed into the engine cycle ahead of
+//! due prefill batches via a bounded priority lane.
 
 pub mod batcher;
 pub mod engine;
@@ -27,5 +33,7 @@ pub mod router;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
-pub use request::{InferRequest, InferResponse, RequestError};
+pub use request::{
+    DecodeRequest, DecodeResponse, InferRequest, InferResponse, RequestError, StreamStats,
+};
 pub use router::{Route, Router};

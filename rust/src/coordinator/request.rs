@@ -47,6 +47,65 @@ impl InferResponse {
     }
 }
 
+/// One autoregressive decode step for a streaming session: the new
+/// token's per-head projections, `[heads, head_dim]` each.
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub session: u64,
+    pub q: crate::tensor::Tensor,
+    pub k: crate::tensor::Tensor,
+    pub v: crate::tensor::Tensor,
+    pub enqueued_at: Instant,
+}
+
+impl DecodeRequest {
+    pub fn new(
+        session: u64,
+        q: crate::tensor::Tensor,
+        k: crate::tensor::Tensor,
+        v: crate::tensor::Tensor,
+    ) -> Self {
+        Self {
+            session,
+            q,
+            k,
+            v,
+            enqueued_at: Instant::now(),
+        }
+    }
+}
+
+/// The engine's answer to one decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeResponse {
+    pub session: u64,
+    /// Prefix length after this token.
+    pub step: usize,
+    /// Concatenated per-head attention outputs, length `heads·head_dim`.
+    pub output: Vec<f32>,
+    /// Branch that served this step (Direct = KV cache, Efficient =
+    /// recurrent state).
+    pub branch: crate::attention::AttentionVariant,
+    /// True iff this step crossed N₀ and promoted the session KV→recurrent.
+    pub promoted: bool,
+    /// Total latency: submit → response.
+    pub latency: std::time::Duration,
+}
+
+/// Closing summary for a finished stream.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    pub session: u64,
+    /// Tokens decoded over the stream's lifetime.
+    pub tokens: usize,
+    /// Branch at close time.
+    pub branch: crate::attention::AttentionVariant,
+    /// Resident state bytes at close time.
+    pub bytes: u64,
+    /// Prefix length at which the session was promoted, if it was.
+    pub promoted_at: Option<usize>,
+}
+
 /// Why a request was rejected or failed.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RequestError {
@@ -60,6 +119,11 @@ pub enum RequestError {
     Shutdown,
     /// PJRT execution failed.
     ExecFailed(String),
+    /// Decode step for a session that is not resident (never opened,
+    /// closed, or LRU-evicted) — the caller must re-prefill.
+    UnknownSession { id: u64 },
+    /// Decode inputs had the wrong shape for the configured heads/dim.
+    BadDecodeShape { expected: [usize; 2], got: Vec<usize> },
 }
 
 impl std::fmt::Display for RequestError {
@@ -72,6 +136,12 @@ impl std::fmt::Display for RequestError {
             Self::Empty => write!(f, "empty token sequence"),
             Self::Shutdown => write!(f, "engine shut down"),
             Self::ExecFailed(e) => write!(f, "execution failed: {e}"),
+            Self::UnknownSession { id } => {
+                write!(f, "unknown decode session {id} (closed or evicted)")
+            }
+            Self::BadDecodeShape { expected, got } => {
+                write!(f, "decode input shape {got:?}, expected {expected:?}")
+            }
         }
     }
 }
@@ -101,5 +171,12 @@ mod tests {
         assert!(e.to_string().contains("5000"));
         let e = RequestError::Overloaded { queued: 100, limit: 64 };
         assert!(e.to_string().contains("overloaded"));
+        let e = RequestError::UnknownSession { id: 42 };
+        assert!(e.to_string().contains("42"));
+        let e = RequestError::BadDecodeShape {
+            expected: [4, 16],
+            got: vec![2, 16],
+        };
+        assert!(e.to_string().contains("[4, 16]"));
     }
 }

@@ -1,0 +1,167 @@
+//! KV-cache decode path for the direct-TaylorShift branch.
+//!
+//! Below the crossover N₀(d) the direct branch is the faster choice,
+//! and at decode time it behaves like vanilla attention with a KV
+//! cache: keep the (normalized) keys and raw values of the prefix and
+//! re-score them against each new query — O(N·d) per token, O(N·d)
+//! state. Keys are stored ℓ2-normalized (normalization is idempotent,
+//! which keeps the later KV→recurrent promotion exact); values are
+//! stored raw.
+
+use crate::analysis::memory;
+
+/// Cached prefix for one attention head on the direct branch.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    d: usize,
+    tau: f64,
+    /// ℓ2-normalized key rows, row-major len × d.
+    keys: Vec<f32>,
+    /// Raw value rows, row-major len × d.
+    values: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(d: usize, tau: f32) -> Self {
+        assert!(d > 0, "head dim must be positive");
+        Self {
+            d,
+            tau: tau as f64,
+            keys: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Tokens cached so far.
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau as f32
+    }
+
+    /// Bytes held by the cached keys and values (f32 entries).
+    pub fn state_bytes(&self) -> u64 {
+        memory::bytes(
+            memory::entries_decode_kv(self.len() as u64, self.d as u64),
+            4,
+        )
+    }
+
+    /// Normalized key row `i` (for promotion rebuilds).
+    pub fn key_row(&self, i: usize) -> &[f32] {
+        &self.keys[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Raw value row `i`.
+    pub fn value_row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Cache one (k, v) token in O(d).
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d, "key dim mismatch");
+        assert_eq!(v.len(), self.d, "value dim mismatch");
+        let norm = k.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = (1.0 / norm.max(1e-12)) as f32;
+        self.keys.extend(k.iter().map(|&x| x * scale));
+        self.values.extend_from_slice(v);
+    }
+
+    /// Attention output of `q` over the cached prefix: equals the last
+    /// row of `taylor_direct(…, tau, true)` on the full prefix, in
+    /// O(N·d).
+    pub fn query(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.d, "query dim mismatch");
+        let n = self.len();
+        assert!(n > 0, "query over empty prefix");
+        let d = self.d;
+        let norm = q.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = self.tau / norm.max(1e-12);
+        let qn: Vec<f64> = q.iter().map(|&x| x as f64 * scale).collect();
+        let mut num = vec![0.0f64; d];
+        let mut den = 0.0f64;
+        for j in 0..n {
+            let key = self.key_row(j);
+            let mut s = 0.0f64;
+            for c in 0..d {
+                s += qn[c] * key[c] as f64;
+            }
+            // w = 1 + s + s²/2 = ½(s+1)² + ½ > 0, so no |·| needed.
+            let w = 1.0 + s + 0.5 * s * s;
+            den += w;
+            let val = self.value_row(j);
+            for c in 0..d {
+                num[c] += w * val[c] as f64;
+            }
+        }
+        let rescale = (n as f64 / d as f64).sqrt() / den.max(1e-12);
+        num.iter().map(|&x| (x * rescale) as f32).collect()
+    }
+
+    /// The per-token decode step: cache (k, v), then attend with `q`.
+    pub fn decode_step(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        self.append(k, v);
+        self.query(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::direct::taylor_direct;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn matches_full_recompute_every_step() {
+        let (n, d, tau) = (40usize, 6usize, 0.8f32);
+        let q = Tensor::randn(&[n, d], 20);
+        let k = Tensor::randn(&[n, d], 21);
+        let v = Tensor::randn(&[n, d], 22);
+        let mut cache = KvCache::new(d, tau);
+        for t in 0..n {
+            let y = cache.decode_step(q.row(t), k.row(t), v.row(t));
+            let prefix = t + 1;
+            let qp = Tensor::new(&[prefix, d], q.data()[..prefix * d].to_vec());
+            let kp = Tensor::new(&[prefix, d], k.data()[..prefix * d].to_vec());
+            let vp = Tensor::new(&[prefix, d], v.data()[..prefix * d].to_vec());
+            let want = taylor_direct(&qp, &kp, &vp, tau, true);
+            let diff: f32 = y
+                .iter()
+                .zip(want.row(t))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(diff < 1e-4, "step {t}: max abs diff {diff}");
+        }
+    }
+
+    #[test]
+    fn state_grows_linearly() {
+        let d = 16usize;
+        let mut cache = KvCache::new(d, 1.0);
+        let k = vec![1.0f32; d];
+        let v = vec![2.0f32; d];
+        for t in 1..=10 {
+            cache.append(&k, &v);
+            assert_eq!(cache.state_bytes(), (2 * t * d * 4) as u64);
+        }
+    }
+
+    #[test]
+    fn stored_keys_are_unit_norm() {
+        let d = 8usize;
+        let mut cache = KvCache::new(d, 1.0);
+        cache.append(&vec![3.0f32; d], &vec![1.0f32; d]);
+        let norm: f32 = cache.key_row(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,35 @@
+//! Streaming autoregressive decode with crossover-aware cached state.
+//!
+//! One-shot inference picks between direct- and efficient-TaylorShift
+//! per request (`attention/selector.rs`). At decode time the same
+//! crossover governs *what state to cache per session*:
+//!
+//! * **Below N₀(d)** — the direct branch with a [`KvCache`]: keep the
+//!   normalized keys and raw values, O(N·d) state, O(N·d) per token.
+//! * **Above N₀(d)** — the efficient branch admits a recurrent form
+//!   ([`RecurrentState`]): three fixed-size moment accumulators over
+//!   the prefix, O(d³) state, O(d³) per token — flat in N.
+//!
+//! A [`DecodeSession`] starts on the KV path and is **promoted** to
+//! recurrent state the step its length crosses the selector threshold
+//! (a one-time O(N·d³) replay of the cache). Both branches compute the
+//! same attention function, so the emitted token stream is continuous
+//! across the switch — the "(and Back)" policy applied while decoding.
+//!
+//! [`SessionStore`] keeps many sessions resident under a configurable
+//! byte budget with LRU eviction, accounted via `analysis/memory.rs`.
+//! The serving integration lives in `coordinator/engine.rs`
+//! (`submit_stream` / `decode_step` / `close_stream`), which mixes
+//! decode steps with batched prefill through a priority lane in
+//! `coordinator/batcher.rs` and reports occupancy, promotions,
+//! evictions, and per-token latency through `coordinator/metrics.rs`.
+
+pub mod kv;
+pub mod recurrent;
+pub mod session;
+
+pub use kv::KvCache;
+pub use recurrent::RecurrentState;
+pub use session::{
+    DecodeConfig, DecodeSession, SessionStore, SessionSummary, StepOutcome, StepResult,
+};

@@ -1,0 +1,207 @@
+//! Recurrent form of efficient-TaylorShift for autoregressive decode.
+//!
+//! Algorithm 1 evaluates `Ŷ = ½ Q^⊠2 ((K^⊠2)ᵀ V̂) + α² Q (Kᵀ V̂) + α⁴ Σᵢ V̂ᵢ`
+//! where every K/V term is a *sum over prefix positions* — so, as in
+//! linear-attention RNNs (Katharopoulos et al.), the three moments
+//!
+//! ```text
+//! M₀ = Σⱼ uⱼ             ∈ R^{d+1}        (uⱼ = [1 | vⱼ], unscaled)
+//! M₁ = Σⱼ k̂ⱼ ⊗ uⱼ        ∈ R^{d×(d+1)}    (k̂ = α·k/‖k‖)
+//! M₂ = Σⱼ (k̂ⱼ ⊠ k̂ⱼ) ⊗ uⱼ ∈ R^{d²×(d+1)}
+//! ```
+//!
+//! are a sufficient statistic for the whole prefix: appending a token
+//! is a rank-1 update in O(d²(d+1)), and a query contracts the moments
+//! in O(d²(d+1)) — both independent of the prefix length N. The 1/N
+//! and √(d/N) factors that Algorithm 1 folds into V̂ cancel in the
+//! final nominator/denominator ratio, leaving a closed-form √(N/d)
+//! output rescale; keeping the moments unscaled is what makes the
+//! update O(1) per token (no N-dependent rescaling of state).
+//!
+//! Accumulators are f64 so that very long prefixes (N ≫ 10⁵) do not
+//! lose the parity-with-recompute guarantee to summation error.
+
+use crate::analysis::memory;
+
+/// Running-moment state for one attention head on the efficient branch.
+#[derive(Clone, Debug)]
+pub struct RecurrentState {
+    d: usize,
+    len: usize,
+    alpha: f64,
+    tau: f64,
+    /// Σⱼ uⱼ, length d+1.
+    m0: Vec<f64>,
+    /// Σⱼ k̂ⱼ ⊗ uⱼ, row-major d × (d+1).
+    m1: Vec<f64>,
+    /// Σⱼ (k̂ⱼ ⊠ k̂ⱼ) ⊗ uⱼ, row-major d² × (d+1).
+    m2: Vec<f64>,
+}
+
+impl RecurrentState {
+    pub fn new(d: usize, tau: f32) -> Self {
+        assert!(d > 0, "head dim must be positive");
+        let w = d + 1;
+        Self {
+            d,
+            len: 0,
+            alpha: (d as f64).powf(0.25),
+            tau: tau as f64,
+            m0: vec![0.0; w],
+            m1: vec![0.0; d * w],
+            m2: vec![0.0; d * d * w],
+        }
+    }
+
+    /// Tokens absorbed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau as f32
+    }
+
+    /// Bytes held by the moment accumulators (f64 entries, length-free).
+    pub fn state_bytes(&self) -> u64 {
+        memory::bytes(memory::entries_decode_recurrent(self.d as u64), 8)
+    }
+
+    /// Absorb one (k, v) token in O(d³), independent of the prefix.
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d, "key dim mismatch");
+        assert_eq!(v.len(), self.d, "value dim mismatch");
+        let (d, w) = (self.d, self.d + 1);
+        // Same ‖k‖ guard as Tensor::normalize_rows.
+        let norm = k.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = self.alpha / norm.max(1e-12);
+        let kn: Vec<f64> = k.iter().map(|&x| x as f64 * scale).collect();
+        let mut u = vec![0.0f64; w];
+        u[0] = 1.0;
+        for (c, &x) in v.iter().enumerate() {
+            u[c + 1] = x as f64;
+        }
+        for c in 0..w {
+            self.m0[c] += u[c];
+        }
+        for a in 0..d {
+            let ka = kn[a];
+            let row1 = &mut self.m1[a * w..(a + 1) * w];
+            for c in 0..w {
+                row1[c] += ka * u[c];
+            }
+            for b in 0..d {
+                let kab = ka * kn[b];
+                let row2 = &mut self.m2[(a * d + b) * w..(a * d + b + 1) * w];
+                for c in 0..w {
+                    row2[c] += kab * u[c];
+                }
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Attention output of `q` over the absorbed prefix: equals the last
+    /// row of `taylor_efficient` run on the full prefix, in O(d³).
+    pub fn query(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.d, "query dim mismatch");
+        assert!(self.len > 0, "query over empty prefix");
+        let (d, w) = (self.d, self.d + 1);
+        let norm = q.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = self.alpha * self.tau / norm.max(1e-12);
+        let qn: Vec<f64> = q.iter().map(|&x| x as f64 * scale).collect();
+        let a2 = self.alpha * self.alpha;
+        let a4 = a2 * a2;
+        let mut y = vec![0.0f64; w];
+        for (c, out) in y.iter_mut().enumerate() {
+            *out = a4 * self.m0[c];
+        }
+        for a in 0..d {
+            let qa = qn[a];
+            let row1 = &self.m1[a * w..(a + 1) * w];
+            for (c, out) in y.iter_mut().enumerate() {
+                *out += a2 * qa * row1[c];
+            }
+            for b in 0..d {
+                let coef = 0.5 * qa * qn[b];
+                let row2 = &self.m2[(a * d + b) * w..(a * d + b + 1) * w];
+                for (c, out) in y.iter_mut().enumerate() {
+                    *out += coef * row2[c];
+                }
+            }
+        }
+        // Per-token Taylor weights are ½(s+1)²+½ > 0 (scaled by α⁴), so
+        // the denominator is strictly positive.
+        let denom = y[0];
+        debug_assert!(denom > 0.0, "Taylor-softmax normalizer must be positive");
+        let rescale = (self.len as f64 / d as f64).sqrt();
+        (0..d).map(|c| (y[c + 1] / denom * rescale) as f32).collect()
+    }
+
+    /// The per-token decode step: absorb (k, v), then attend with `q`
+    /// (causal self-attention includes the new token itself).
+    pub fn decode_step(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        self.append(k, v);
+        self.query(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::efficient::taylor_efficient;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn matches_full_recompute_every_step() {
+        let (n, d, tau) = (48usize, 8usize, 1.3f32);
+        let q = Tensor::randn(&[n, d], 10);
+        let k = Tensor::randn(&[n, d], 11);
+        let v = Tensor::randn(&[n, d], 12);
+        let mut state = RecurrentState::new(d, tau);
+        for t in 0..n {
+            let y = state.decode_step(q.row(t), k.row(t), v.row(t));
+            let prefix = t + 1;
+            let qp = Tensor::new(&[prefix, d], q.data()[..prefix * d].to_vec());
+            let kp = Tensor::new(&[prefix, d], k.data()[..prefix * d].to_vec());
+            let vp = Tensor::new(&[prefix, d], v.data()[..prefix * d].to_vec());
+            let want = taylor_efficient(&qp, &kp, &vp, tau);
+            let diff: f32 = y
+                .iter()
+                .zip(want.row(t))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(diff < 1e-4, "step {t}: max abs diff {diff}");
+        }
+    }
+
+    #[test]
+    fn state_size_is_length_independent() {
+        let mut state = RecurrentState::new(16, 1.0);
+        let bytes0 = state.state_bytes();
+        let k = vec![0.5f32; 16];
+        let v = vec![0.25f32; 16];
+        for _ in 0..100 {
+            state.append(&k, &v);
+        }
+        assert_eq!(state.len(), 100);
+        assert_eq!(state.state_bytes(), bytes0);
+        // (d+1)(d²+d+1) f64 entries.
+        assert_eq!(bytes0, 17 * (256 + 16 + 1) * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "query over empty prefix")]
+    fn query_on_empty_prefix_panics() {
+        let state = RecurrentState::new(4, 1.0);
+        state.query(&[1.0, 0.0, 0.0, 0.0]);
+    }
+}

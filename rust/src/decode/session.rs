@@ -1,0 +1,546 @@
+//! Per-session decode state and the LRU session store.
+//!
+//! A [`DecodeSession`] holds one multi-head streaming context. It
+//! starts on the branch the [`Selector`] picks for a length-1 prefix
+//! (direct/KV below the crossover) and is *promoted* to the recurrent
+//! moment state when its length crosses N₀(d) — the paper's "(and
+//! Back)" switch applied at decode time. Promotion replays the cached
+//! (k, v) pairs into [`RecurrentState`] once (O(N·d³)); because the
+//! two branches compute the same function, the output stream is
+//! continuous across the switch.
+//!
+//! The [`SessionStore`] keeps many sessions resident under a byte
+//! budget, accounted through `analysis/memory.rs` entry counts, and
+//! evicts least-recently-used sessions when the budget (or a session
+//! count cap) is exceeded.
+
+use std::collections::HashMap;
+
+use super::kv::KvCache;
+use super::recurrent::RecurrentState;
+use crate::attention::selector::Selector;
+use crate::attention::AttentionVariant;
+use crate::tensor::Tensor;
+
+/// Decode-subsystem configuration (engine-level).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeConfig {
+    /// Attention heads per streaming session.
+    pub heads: usize,
+    /// Temperature shared by both branches.
+    pub tau: f32,
+    /// Total resident-state budget across sessions, in bytes.
+    pub max_session_bytes: u64,
+    /// Hard cap on resident sessions regardless of bytes.
+    pub max_sessions: usize,
+    /// Max decode steps the engine serves ahead of due prefill batches
+    /// in one drive cycle (the decode/prefill mixing knob).
+    pub max_steps_per_cycle: usize,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        Self {
+            heads: 4,
+            tau: 1.0,
+            max_session_bytes: 64 << 20,
+            max_sessions: 256,
+            max_steps_per_cycle: 64,
+        }
+    }
+}
+
+enum Branch {
+    Kv(Vec<KvCache>),
+    Recurrent(Vec<RecurrentState>),
+}
+
+/// Result of one decode step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// Concatenated per-head outputs, length `heads · d`.
+    pub output: Vec<f32>,
+    /// Branch that produced this step.
+    pub branch: AttentionVariant,
+    /// True iff this step triggered the KV→recurrent promotion.
+    pub promoted: bool,
+    /// Prefix length after this step.
+    pub len: usize,
+}
+
+/// One multi-head streaming decode context.
+pub struct DecodeSession {
+    heads: usize,
+    d: usize,
+    len: usize,
+    branch: Branch,
+    promoted_at: Option<usize>,
+    bytes: u64,
+    last_used: u64,
+}
+
+impl DecodeSession {
+    /// A fresh session. `start_recurrent` skips the KV phase entirely
+    /// (used when the variant is forced to Efficient).
+    pub fn new(heads: usize, d: usize, tau: f32, start_recurrent: bool) -> Self {
+        assert!(heads > 0 && d > 0, "heads and head dim must be positive");
+        let branch = if start_recurrent {
+            Branch::Recurrent((0..heads).map(|_| RecurrentState::new(d, tau)).collect())
+        } else {
+            Branch::Kv((0..heads).map(|_| KvCache::new(d, tau)).collect())
+        };
+        let mut s = Self {
+            heads,
+            d,
+            len: 0,
+            branch,
+            promoted_at: None,
+            bytes: 0,
+            last_used: 0,
+        };
+        s.bytes = s.state_bytes();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    /// Variant currently serving this session.
+    pub fn branch(&self) -> AttentionVariant {
+        match self.branch {
+            Branch::Kv(_) => AttentionVariant::Direct,
+            Branch::Recurrent(_) => AttentionVariant::Efficient,
+        }
+    }
+
+    /// Prefix length at which the session switched to recurrent state.
+    pub fn promoted_at(&self) -> Option<usize> {
+        self.promoted_at
+    }
+
+    /// Resident bytes of this session's state.
+    pub fn state_bytes(&self) -> u64 {
+        match &self.branch {
+            Branch::Kv(caches) => caches.iter().map(KvCache::state_bytes).sum(),
+            Branch::Recurrent(states) => states.iter().map(RecurrentState::state_bytes).sum(),
+        }
+    }
+
+    /// Switch KV → recurrent by replaying the cached prefix into the
+    /// moment accumulators (one-time O(N·d³)). No-op if already
+    /// recurrent. Exact: the cached keys are already normalized and
+    /// both branches compute the same attention function.
+    pub fn promote(&mut self) -> bool {
+        let Branch::Kv(caches) = &self.branch else {
+            return false;
+        };
+        let states: Vec<RecurrentState> = caches
+            .iter()
+            .map(|cache| {
+                let mut state = RecurrentState::new(self.d, cache.tau());
+                for i in 0..cache.len() {
+                    state.append(cache.key_row(i), cache.value_row(i));
+                }
+                state
+            })
+            .collect();
+        self.branch = Branch::Recurrent(states);
+        self.promoted_at = Some(self.len);
+        self.bytes = self.state_bytes();
+        true
+    }
+
+    /// Append one token's (k, v) and attend with `q`. Inputs are
+    /// `[heads, d]` tensors; output concatenates head outputs
+    /// feature-wise (same layout as `attention::mhsa` rows). When
+    /// `crossover` is given and the new length reaches it, the session
+    /// is promoted first so the step itself runs recurrent.
+    pub fn step(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        crossover: Option<f64>,
+    ) -> StepResult {
+        for (name, t) in [("q", q), ("k", k), ("v", v)] {
+            assert_eq!(
+                t.shape(),
+                &[self.heads, self.d],
+                "{name} must be [heads={}, d={}]",
+                self.heads,
+                self.d
+            );
+        }
+        let new_len = self.len + 1;
+        let promoted = match crossover {
+            Some(n0) if matches!(self.branch, Branch::Kv(_)) && new_len as f64 >= n0 => {
+                self.promote()
+            }
+            _ => false,
+        };
+        let mut output = Vec::with_capacity(self.heads * self.d);
+        match &mut self.branch {
+            Branch::Kv(caches) => {
+                for (h, cache) in caches.iter_mut().enumerate() {
+                    output.extend(cache.decode_step(q.row(h), k.row(h), v.row(h)));
+                }
+            }
+            Branch::Recurrent(states) => {
+                for (h, state) in states.iter_mut().enumerate() {
+                    output.extend(state.decode_step(q.row(h), k.row(h), v.row(h)));
+                }
+            }
+        }
+        self.len = new_len;
+        self.bytes = self.state_bytes();
+        StepResult {
+            output,
+            branch: self.branch(),
+            promoted,
+            len: new_len,
+        }
+    }
+}
+
+/// Closing summary for a finished session.
+#[derive(Clone, Debug)]
+pub struct SessionSummary {
+    pub tokens: usize,
+    pub branch: AttentionVariant,
+    pub bytes: u64,
+    pub promoted_at: Option<usize>,
+}
+
+/// Outcome of a store-level decode step.
+pub struct StepOutcome {
+    pub result: StepResult,
+    /// Sessions LRU-evicted to make room during this operation.
+    pub evicted: Vec<u64>,
+}
+
+/// LRU-evicting, byte-budgeted collection of resident decode sessions.
+pub struct SessionStore {
+    cfg: DecodeConfig,
+    head_dim: usize,
+    selector: Selector,
+    forced: Option<AttentionVariant>,
+    sessions: HashMap<u64, DecodeSession>,
+    clock: u64,
+    resident_bytes: u64,
+}
+
+impl SessionStore {
+    /// `forced` mirrors the engine's variant override: `Direct` pins
+    /// sessions to the KV path (never promote), `Efficient` starts
+    /// them recurrent. `Softmax` has no streaming form and falls back
+    /// to the selector policy.
+    pub fn new(
+        cfg: DecodeConfig,
+        head_dim: usize,
+        selector: Selector,
+        forced: Option<AttentionVariant>,
+    ) -> Self {
+        Self {
+            cfg,
+            head_dim,
+            selector,
+            forced,
+            sessions: HashMap::new(),
+            clock: 0,
+            resident_bytes: 0,
+        }
+    }
+
+    pub fn config(&self) -> &DecodeConfig {
+        &self.cfg
+    }
+
+    /// Resident session count.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Total bytes held by resident session state.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Crossover threshold governing KV→recurrent promotion, if any.
+    fn promotion_threshold(&self) -> Option<f64> {
+        match self.forced {
+            Some(AttentionVariant::Direct) | Some(AttentionVariant::Efficient) => None,
+            _ => Some(self.selector.crossover(self.head_dim)),
+        }
+    }
+
+    /// Open (or reset) a session. Returns ids evicted to fit it.
+    pub fn open(&mut self, id: u64) -> Vec<u64> {
+        let start_recurrent = match self.forced {
+            Some(AttentionVariant::Efficient) => true,
+            Some(AttentionVariant::Direct) => false,
+            // Selector policy: the branch a length-1 prefix would get.
+            _ => self.selector.select(1, self.head_dim) == AttentionVariant::Efficient,
+        };
+        if let Some(old) = self.sessions.remove(&id) {
+            self.resident_bytes -= old.bytes;
+        }
+        let mut session =
+            DecodeSession::new(self.cfg.heads, self.head_dim, self.cfg.tau, start_recurrent);
+        self.clock += 1;
+        session.last_used = self.clock;
+        self.resident_bytes += session.bytes;
+        self.sessions.insert(id, session);
+        self.enforce_budget(Some(id))
+    }
+
+    /// One decode step for session `id`. `None` if the session is not
+    /// resident (never opened, closed, or evicted).
+    pub fn step(&mut self, id: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Option<StepOutcome> {
+        let threshold = self.promotion_threshold();
+        self.clock += 1;
+        let clock = self.clock;
+        let session = self.sessions.get_mut(&id)?;
+        let before = session.bytes;
+        let result = session.step(q, k, v, threshold);
+        let after = session.bytes;
+        session.last_used = clock;
+        // `before` is included in the resident total, so this never underflows.
+        self.resident_bytes = self.resident_bytes - before + after;
+        let evicted = self.enforce_budget(Some(id));
+        Some(StepOutcome { result, evicted })
+    }
+
+    /// Drop a session, returning its closing summary.
+    pub fn close(&mut self, id: u64) -> Option<SessionSummary> {
+        let session = self.sessions.remove(&id)?;
+        self.resident_bytes -= session.bytes;
+        Some(SessionSummary {
+            tokens: session.len,
+            branch: session.branch(),
+            bytes: session.bytes,
+            promoted_at: session.promoted_at,
+        })
+    }
+
+    /// Evict LRU sessions until both the byte budget and the session
+    /// cap hold. The session named by `protect` (the one being
+    /// operated on) is never evicted.
+    fn enforce_budget(&mut self, protect: Option<u64>) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        loop {
+            let over_bytes = self.resident_bytes > self.cfg.max_session_bytes;
+            let over_count = self.sessions.len() > self.cfg.max_sessions;
+            if !over_bytes && !over_count {
+                break;
+            }
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(id, _)| Some(**id) != protect)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(id, _)| *id);
+            let Some(victim) = victim else {
+                break; // only the protected session remains
+            };
+            let gone = self.sessions.remove(&victim).expect("victim resident");
+            self.resident_bytes -= gone.bytes;
+            evicted.push(victim);
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{self, AttentionVariant};
+
+    fn qkv(heads: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::randn(&[heads, d], seed),
+            Tensor::randn(&[heads, d], seed + 1),
+            Tensor::randn(&[heads, d], seed + 2),
+        )
+    }
+
+    #[test]
+    fn session_promotes_at_crossover_and_stays_continuous() {
+        let (heads, d, tau) = (2usize, 4usize, 1.0f32);
+        let mut session = DecodeSession::new(heads, d, tau, false);
+        let n = 24usize;
+        let crossover = 10.0f64;
+        // Full per-head history for the reference recompute.
+        let mut hist: Vec<(Tensor, Tensor, Tensor)> = Vec::new();
+        for t in 0..n {
+            let (q, k, v) = qkv(heads, d, 1000 + t as u64 * 3);
+            hist.push((q.clone(), k.clone(), v.clone()));
+            let r = session.step(&q, &k, &v, Some(crossover));
+            assert_eq!(r.promoted, t + 1 == 10);
+            let want_variant = if (t + 1) as f64 >= crossover {
+                AttentionVariant::Efficient
+            } else {
+                AttentionVariant::Direct
+            };
+            assert_eq!(r.branch, want_variant);
+            // Reference: full recompute per head with the same variant.
+            for h in 0..heads {
+                let prefix = t + 1;
+                let mut qs = Vec::new();
+                let mut ks = Vec::new();
+                let mut vs = Vec::new();
+                for (qq, kk, vv) in &hist {
+                    qs.extend_from_slice(qq.row(h));
+                    ks.extend_from_slice(kk.row(h));
+                    vs.extend_from_slice(vv.row(h));
+                }
+                let qp = Tensor::new(&[prefix, d], qs);
+                let kp = Tensor::new(&[prefix, d], ks);
+                let vp = Tensor::new(&[prefix, d], vs);
+                let want = attention::run_variant(want_variant, &qp, &kp, &vp, tau);
+                let got = &r.output[h * d..(h + 1) * d];
+                let diff: f32 = got
+                    .iter()
+                    .zip(want.row(t))
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                assert!(diff < 1e-4, "t={t} h={h} diff={diff}");
+            }
+        }
+        assert_eq!(session.promoted_at(), Some(10));
+    }
+
+    #[test]
+    fn store_evicts_lru_under_byte_budget() {
+        let d = 8usize;
+        let cfg = DecodeConfig {
+            heads: 1,
+            // Room for roughly two KV sessions of ~12 tokens each.
+            max_session_bytes: 2 * 12 * 2 * d as u64 * 4,
+            max_sessions: 16,
+            ..DecodeConfig::default()
+        };
+        let mut store = SessionStore::new(cfg, d, Selector::analytical(), Some(AttentionVariant::Direct));
+        let (q, k, v) = qkv(1, d, 7);
+        store.open(1);
+        store.open(2);
+        store.open(3);
+        let mut all_evicted = Vec::new();
+        for _ in 0..12 {
+            for id in [1u64, 2, 3] {
+                if store.contains(id) {
+                    let out = store.step(id, &q, &k, &v).unwrap();
+                    all_evicted.extend(out.evicted);
+                }
+            }
+        }
+        assert!(!all_evicted.is_empty(), "budget never triggered eviction");
+        assert!(store.resident_bytes() <= store.config().max_session_bytes);
+        // Evicted sessions are gone: step returns None.
+        let gone = all_evicted[0];
+        assert!(store.step(gone, &q, &k, &v).is_none());
+    }
+
+    #[test]
+    fn store_caps_session_count() {
+        let cfg = DecodeConfig {
+            heads: 1,
+            max_sessions: 2,
+            ..DecodeConfig::default()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        assert!(store.open(1).is_empty());
+        assert!(store.open(2).is_empty());
+        let evicted = store.open(3);
+        assert_eq!(evicted, vec![1], "oldest session evicted");
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn lru_order_follows_use_not_creation() {
+        let cfg = DecodeConfig {
+            heads: 1,
+            max_sessions: 2,
+            ..DecodeConfig::default()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        let (q, k, v) = qkv(1, 4, 9);
+        store.open(1);
+        store.open(2);
+        store.step(1, &q, &k, &v).unwrap(); // 1 is now most recent
+        let evicted = store.open(3);
+        assert_eq!(evicted, vec![2]);
+        assert!(store.contains(1) && store.contains(3));
+    }
+
+    #[test]
+    fn forced_direct_never_promotes() {
+        let mut store = SessionStore::new(
+            DecodeConfig { heads: 1, ..DecodeConfig::default() },
+            2, // crossover N0(2) is tiny — would promote immediately
+            Selector::analytical(),
+            Some(AttentionVariant::Direct),
+        );
+        let (q, k, v) = qkv(1, 2, 3);
+        store.open(5);
+        for _ in 0..32 {
+            let out = store.step(5, &q, &k, &v).unwrap();
+            assert_eq!(out.result.branch, AttentionVariant::Direct);
+            assert!(!out.result.promoted);
+        }
+    }
+
+    #[test]
+    fn forced_efficient_starts_recurrent() {
+        let mut store = SessionStore::new(
+            DecodeConfig { heads: 1, ..DecodeConfig::default() },
+            16,
+            Selector::analytical(),
+            Some(AttentionVariant::Efficient),
+        );
+        let (q, k, v) = qkv(1, 16, 4);
+        store.open(5);
+        let out = store.step(5, &q, &k, &v).unwrap();
+        assert_eq!(out.result.branch, AttentionVariant::Efficient);
+        assert!(!out.result.promoted, "no promotion event when born recurrent");
+    }
+
+    #[test]
+    fn close_reports_summary_and_frees_bytes() {
+        let mut store = SessionStore::new(
+            DecodeConfig { heads: 2, ..DecodeConfig::default() },
+            4,
+            Selector::analytical(),
+            None,
+        );
+        let (q, k, v) = qkv(2, 4, 11);
+        store.open(9);
+        for _ in 0..3 {
+            store.step(9, &q, &k, &v).unwrap();
+        }
+        let summary = store.close(9).unwrap();
+        assert_eq!(summary.tokens, 3);
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(store.close(9).is_none());
+    }
+}

@@ -50,6 +50,7 @@ pub mod bench_support;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;

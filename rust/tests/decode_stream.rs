@@ -1,0 +1,187 @@
+//! Property tests for the streaming decode subsystem (`decode/`):
+//! incremental per-token decode must compute exactly the same function
+//! as the batch attention implementations over the full prefix —
+//! including across a mid-stream KV→recurrent promotion — and the
+//! session store must respect its memory budget.
+
+use taylorshift::attention::selector::Selector;
+use taylorshift::attention::{direct, efficient, run_variant, AttentionVariant};
+use taylorshift::decode::{DecodeConfig, DecodeSession, KvCache, RecurrentState, SessionStore};
+use taylorshift::tensor::Tensor;
+use taylorshift::testing::prop::{pair, run, Config, Gen};
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max)
+}
+
+fn prefix(t: &Tensor, n: usize, d: usize) -> Tensor {
+    Tensor::new(&[n, d], t.data()[..n * d].to_vec())
+}
+
+#[test]
+fn prop_recurrent_decode_matches_efficient_at_every_length() {
+    run(
+        Config::default().cases(24).seed(0xA11CE),
+        pair(
+            pair(Gen::usize_range(2, 40), Gen::usize_range(2, 12)),
+            Gen::f64_range(0.5, 2.0),
+        ),
+        |&((n, d), tau)| {
+            let tau = tau as f32;
+            let seed = (n * 1000 + d) as u64;
+            let q = Tensor::randn(&[n, d], seed);
+            let k = Tensor::randn(&[n, d], seed + 1);
+            let v = Tensor::randn(&[n, d], seed + 2);
+            let mut state = RecurrentState::new(d, tau);
+            for t in 0..n {
+                let got = state.decode_step(q.row(t), k.row(t), v.row(t));
+                let want = efficient::taylor_efficient(
+                    &prefix(&q, t + 1, d),
+                    &prefix(&k, t + 1, d),
+                    &prefix(&v, t + 1, d),
+                    tau,
+                );
+                if max_abs_diff(&got, want.row(t)) >= 1e-4 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_kv_decode_matches_direct_at_every_length() {
+    run(
+        Config::default().cases(24).seed(0xCACE),
+        pair(
+            pair(Gen::usize_range(2, 40), Gen::usize_range(2, 12)),
+            Gen::f64_range(0.5, 2.0),
+        ),
+        |&((n, d), tau)| {
+            let tau = tau as f32;
+            let seed = (n * 919 + d) as u64;
+            let q = Tensor::randn(&[n, d], seed);
+            let k = Tensor::randn(&[n, d], seed + 1);
+            let v = Tensor::randn(&[n, d], seed + 2);
+            let mut cache = KvCache::new(d, tau);
+            for t in 0..n {
+                let got = cache.decode_step(q.row(t), k.row(t), v.row(t));
+                let want = direct::taylor_direct(
+                    &prefix(&q, t + 1, d),
+                    &prefix(&k, t + 1, d),
+                    &prefix(&v, t + 1, d),
+                    tau,
+                    true,
+                );
+                if max_abs_diff(&got, want.row(t)) >= 1e-4 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Forced mid-stream promotion: a session starting on the KV branch and
+/// promoted at a random crossover point must stay within 1e-4 of the
+/// batch recompute of whichever branch served each step.
+#[test]
+fn prop_decode_is_continuous_across_promotion() {
+    run(
+        Config::default().cases(24).seed(0xBEEF),
+        pair(
+            pair(Gen::usize_range(4, 32), Gen::usize_range(2, 10)),
+            pair(Gen::f64_range(0.5, 2.0), Gen::usize_range(2, 32)),
+        ),
+        |&((n, d), (tau, p))| {
+            let tau = tau as f32;
+            let p = p.min(n); // promotion point within the stream
+            let seed = (n * 131 + d * 7 + p) as u64;
+            let q = Tensor::randn(&[n, d], seed);
+            let k = Tensor::randn(&[n, d], seed + 1);
+            let v = Tensor::randn(&[n, d], seed + 2);
+            let mut session = DecodeSession::new(1, d, tau, false);
+            for t in 0..n {
+                let row = |src: &Tensor| Tensor::new(&[1, d], src.row(t).to_vec());
+                let r = session.step(&row(&q), &row(&k), &row(&v), Some(p as f64));
+                if r.promoted != (t + 1 == p) {
+                    return false;
+                }
+                let expect_branch = if t + 1 < p {
+                    AttentionVariant::Direct
+                } else {
+                    AttentionVariant::Efficient
+                };
+                if r.branch != expect_branch {
+                    return false;
+                }
+                let want = run_variant(
+                    r.branch,
+                    &prefix(&q, t + 1, d),
+                    &prefix(&k, t + 1, d),
+                    &prefix(&v, t + 1, d),
+                    tau,
+                );
+                if max_abs_diff(&r.output, want.row(t)) >= 1e-4 {
+                    return false;
+                }
+            }
+            session.promoted_at() == Some(p)
+        },
+    );
+}
+
+/// The store never exceeds its session cap, and never exceeds its byte
+/// budget while more than one session is resident (a single oversized
+/// session is kept — the active stream must be able to make progress).
+#[test]
+fn prop_store_respects_budget_and_cap() {
+    run(
+        Config::default().cases(16).seed(0x5103),
+        pair(
+            pair(Gen::usize_range(2, 6), Gen::usize_range(1, 4)),
+            Gen::usize_range(1, 24),
+        ),
+        |&((streams, max_sessions), steps_each)| {
+            let d = 8usize;
+            let cfg = DecodeConfig {
+                heads: 1,
+                // Tight: a few KV tokens' worth of state.
+                max_session_bytes: 6 * 2 * d as u64 * 4,
+                max_sessions,
+                ..DecodeConfig::default()
+            };
+            let budget = cfg.max_session_bytes;
+            // Forced Direct keeps sessions on the growing KV branch.
+            let mut store = SessionStore::new(
+                cfg,
+                d,
+                Selector::analytical(),
+                Some(AttentionVariant::Direct),
+            );
+            for s in 0..streams as u64 {
+                store.open(s);
+                for t in 0..steps_each {
+                    let seed = s * 100 + t as u64;
+                    let q = Tensor::randn(&[1, d], seed);
+                    let k = Tensor::randn(&[1, d], seed + 1);
+                    let v = Tensor::randn(&[1, d], seed + 2);
+                    // The session may itself have been evicted by a
+                    // later open; a miss is a valid outcome here.
+                    let _ = store.step(s, &q, &k, &v);
+                    if store.len() > max_sessions {
+                        return false;
+                    }
+                    if store.len() > 1 && store.resident_bytes() > budget {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}

@@ -28,6 +28,7 @@ fn start_engine(buckets: Vec<usize>) -> Option<Engine> {
                 queue_limit: 128,
                 forced_variant: None,
                 selector: taylorshift::attention::selector::Selector::analytical(),
+                ..EngineConfig::default()
             },
             move || RegistryExecutor::new(dir, "serve", &b, &[1, 8]),
         )
@@ -89,6 +90,7 @@ fn direct_and_efficient_artifacts_agree_via_engine() {
                 queue_limit: 16,
                 forced_variant: Some(variant),
                 selector: taylorshift::attention::selector::Selector::analytical(),
+                ..EngineConfig::default()
             },
             move || RegistryExecutor::new(d, "serve", &[128], &[1, 8]),
         )

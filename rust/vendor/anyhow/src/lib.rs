@@ -1,0 +1,149 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build environment has no crates.io access, so the crate
+//! is vendored with exactly the surface this repository uses: a
+//! string-backed [`Error`], the [`Result`] alias, the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Error causes are
+//! flattened into the message chain (`"context: cause"`), which is all
+//! the binaries and tests here rely on.
+
+use std::convert::Infallible;
+use std::fmt::{self, Display};
+
+/// String-backed error type. Wrapping is eager: the source error is
+/// formatted into the message at construction time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: Display>(msg: M) -> Self {
+        Self {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`. (`Error` itself deliberately does
+// not implement `std::error::Error`, exactly like the real anyhow —
+// that is what keeps this blanket impl coherent.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to failures, mirroring anyhow's `Context`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        let parsed: std::result::Result<u32, _> = "x".parse::<u32>();
+        let v = parsed.context("parsing x")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let err = fails().unwrap_err();
+        assert!(err.to_string().starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+        fn guard(x: u32) -> Result<u32> {
+            ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        }
+        assert!(guard(1).is_err());
+        assert_eq!(guard(3).unwrap(), 3);
+    }
+}
