@@ -1,0 +1,59 @@
+//! CI bench-regression gate for the streaming-decode flatness claim.
+//!
+//! Reads `recurrent_flat_ratio` (per-token recurrent decode time at the
+//! longest prefix over the shortest — 1.0 means perfectly flat, i.e.
+//! O(d³) per token independent of N) from the current bench output and
+//! from a committed baseline, and fails if the current ratio regressed
+//! by more than `--max-regress` (default 20%).
+//!
+//! Exit codes: 0 = pass, 1 = regression, 2 = missing/malformed input.
+//!
+//! ```text
+//! cargo bench --bench decode_stream            # writes bench_out/decode_stream.json
+//! cargo run --example bench_gate -- \
+//!     --current bench_out/decode_stream.json \
+//!     --baseline ../bench/baseline.json \
+//!     --max-regress 0.2
+//! ```
+
+use taylorshift::util::cli::Args;
+use taylorshift::util::json::Json;
+
+fn read_ratio(path: &str) -> Result<f64, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("{path}: parse error: {e}"))?;
+    json.get("recurrent_flat_ratio")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing numeric key 'recurrent_flat_ratio'"))
+}
+
+fn main() {
+    let args = Args::from_env();
+    let current = args.str_or("current", "bench_out/decode_stream.json");
+    let baseline = args.str_or("baseline", "../bench/baseline.json");
+    let tol = args.f64_or("max-regress", 0.2);
+
+    let (cur, base) = match (read_ratio(current), read_ratio(baseline)) {
+        (Ok(c), Ok(b)) => (c, b),
+        (c, b) => {
+            for r in [c, b] {
+                if let Err(e) = r {
+                    eprintln!("bench_gate: {e}");
+                }
+            }
+            std::process::exit(2);
+        }
+    };
+
+    let limit = base * (1.0 + tol);
+    println!(
+        "bench_gate: recurrent_flat_ratio current={cur:.3} baseline={base:.3} \
+         limit={limit:.3} (max-regress {:.0}%)",
+        tol * 100.0
+    );
+    if cur > limit {
+        println!("FAIL: flatness ratio regressed beyond tolerance");
+        std::process::exit(1);
+    }
+    println!("PASS");
+}

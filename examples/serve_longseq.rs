@@ -6,10 +6,11 @@
 //! arrivals. Reports latency percentiles, throughput, batch occupancy
 //! and the per-variant split.
 //!
-//! Also demos the **streaming decode** path: a session fed one token at
-//! a time starts on the KV-cache branch and is promoted to the O(1)
-//! recurrent state when its prefix crosses N₀ — the crossover applied
-//! at decode time.
+//! Also demos the **whole-model streaming decode** path: a session fed
+//! one token embedding at a time threads it through every transformer
+//! block; each layer starts on the KV-cache branch and is promoted to
+//! the O(1) recurrent state when its prefix crosses N₀ — the crossover
+//! applied at decode time, per layer.
 //!
 //! Run: `cargo run --release --example serve_longseq -- --requests 200`
 //! Flags: --requests N --concurrency C --variant auto|direct|efficient
@@ -126,22 +127,28 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== load complete: {requests} requests in {wall:.2}s ({:.1} req/s) ===\n", requests as f64 / wall);
 
-    // --- streaming decode: the crossover applied at decode time ---
+    // --- whole-model streaming decode: crossover applied per layer ---
     let decode_tokens = args.usize_or("decode-tokens", 1024);
+    let d_model = heads * head_dim;
     println!("\nstreaming {decode_tokens} decode steps through one session...");
     let sid = engine.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
     let t0 = Instant::now();
     for t in 0..decode_tokens {
         let s = seed.wrapping_mul(1000) + t as u64;
-        let q = Tensor::randn(&[heads, head_dim], s);
-        let k = Tensor::randn(&[heads, head_dim], s + 1);
-        let v = Tensor::randn(&[heads, head_dim], s + 2);
+        let token = Tensor::randn(&[1, d_model], s);
         let resp = engine
-            .decode_step(sid, q, k, v)
+            .decode_step(sid, token)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         if resp.promoted {
+            let layers: Vec<usize> = resp
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.promoted)
+                .map(|(i, _)| i)
+                .collect();
             println!(
-                "  prefix {} crossed N0 → promoted KV cache to recurrent state",
+                "  prefix {} crossed N0 → promoted KV cache to recurrent state in layer(s) {layers:?}",
                 resp.step
             );
         }
@@ -151,11 +158,11 @@ fn main() -> anyhow::Result<()> {
         .close_stream(sid)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
-        "decoded {} tokens in {decode_wall:.2}s ({:.0} tok/s), final branch {:?}, \
+        "decoded {} tokens in {decode_wall:.2}s ({:.0} tok/s), final branches {:?}, \
          state {} bytes, promoted at {:?}",
         stats.tokens,
         stats.tokens as f64 / decode_wall,
-        stats.branch,
+        stats.branches,
         stats.bytes,
         stats.promoted_at,
     );

@@ -6,12 +6,20 @@
 //! O(d³) — *independent of N*. The bench sweeps prefix lengths from 256
 //! to 8192 and verifies the recurrent per-token time stays flat
 //! (≤1.5× from the shortest to the longest prefix) while KV grows.
+//! A second sweep streams a whole multi-layer model (attention + MLP
+//! per block) with every layer recurrent and reports the same flatness
+//! ratio end-to-end.
+//!
+//! The emitted `bench_out/decode_stream.json` carries
+//! `recurrent_flat_ratio`, which CI's bench-smoke job gates against
+//! `bench/baseline.json` (see `examples/bench_gate.rs`).
 //!
 //! Run: `cargo bench --bench decode_stream`  (TS_BENCH_QUICK=1 to smoke)
 
 use std::time::Instant;
 use taylorshift::bench_support::{bench, fmt_seconds, write_json, BenchConfig, Table};
-use taylorshift::decode::{KvCache, RecurrentState};
+use taylorshift::decode::{DecodeConfig, KvCache, RecurrentState};
+use taylorshift::model::{ModelConfig, ModelSession, StreamingModel};
 use taylorshift::tensor::Tensor;
 use taylorshift::util::json::Json;
 
@@ -95,11 +103,59 @@ fn main() {
         flat_ratio
     );
 
+    // Whole-model streaming: one token through every block (pre-LN,
+    // multi-head TaylorShift attention, MLP, residuals) with all layers
+    // on the recurrent branch. Per-token cost must stay flat in N too —
+    // the per-layer states are the only thing that grows with prefix.
+    let model_lengths: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
+    let model = StreamingModel::new(ModelConfig::from_decode(
+        &DecodeConfig {
+            heads: 4,
+            n_layers: 2,
+            ..DecodeConfig::default()
+        },
+        16,
+    ));
+    let dm = model.d_model();
+    let n_layers = model.config().n_layers;
+    let mut model_table = Table::new(&["prefix N", "model per-token"]);
+    let mut model_series = Vec::new();
+    let mut model_means = Vec::new();
+    for &n in model_lengths {
+        let mut session =
+            ModelSession::with_thresholds(&model, &vec![true; n_layers], vec![None; n_layers]);
+        let x = Tensor::randn(&[n, dm], 8);
+        for t in 0..n {
+            let token = Tensor::new(&[1, dm], x.row(t).to_vec());
+            model.step(&mut session, &token);
+        }
+        let token = Tensor::randn(&[1, dm], 9);
+        let t_model = bench(format!("model_n{n}"), &cfg, || {
+            std::hint::black_box(model.step(&mut session, &token));
+        });
+        model_table.row(&[format!("{n}"), fmt_seconds(t_model.mean_s)]);
+        model_means.push(t_model.mean_s);
+        model_series.push(Json::from_pairs(vec![
+            ("n", Json::Num(n as f64)),
+            ("model_mean_s", Json::Num(t_model.mean_s)),
+        ]));
+    }
+    model_table.print();
+    let model_flat_ratio = model_means.last().unwrap() / model_means.first().unwrap();
+    println!(
+        "whole-model per-token flatness N={}→N={}: {:.2}x",
+        model_lengths.first().unwrap(),
+        model_lengths.last().unwrap(),
+        model_flat_ratio
+    );
+
     write_json(
         "decode_stream",
         &Json::from_pairs(vec![
             ("series", Json::Arr(series)),
             ("recurrent_flat_ratio", Json::Num(flat_ratio)),
+            ("model_series", Json::Arr(model_series)),
+            ("model_flat_ratio", Json::Num(model_flat_ratio)),
         ]),
     );
 }

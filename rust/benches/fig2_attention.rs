@@ -5,13 +5,17 @@
 //! memory crossover N̂₁.
 //!
 //! Timing runs rust-emitted PJRT executables (h=1, like the paper's
-//! single-head module benchmark); memory uses the paper's own
-//! entry-count model at fp32, since CPU PJRT exposes no VRAM analogue.
+//! single-head module benchmark) when a real backend is present; on the
+//! offline stub (where `PjRtClient::compile` is gated off, e.g. CI's
+//! bench-smoke job) it falls back to the pure-rust reference kernels —
+//! the relative shape of the curves is what the figure is about. Memory
+//! uses the paper's own entry-count model at fp32, since CPU PJRT
+//! exposes no VRAM analogue.
 //!
 //! Run: `cargo bench --bench fig2_attention`  (TS_BENCH_QUICK=1 to smoke)
 
 use taylorshift::analysis::{memory, transitions};
-use taylorshift::attention::selector;
+use taylorshift::attention::{self, selector, AttentionVariant};
 use taylorshift::bench_support::{bench, fmt_mib, fmt_seconds, BenchConfig, Table, write_json};
 use taylorshift::runtime::emitter::{self, EmitVariant};
 use taylorshift::runtime::Runtime;
@@ -23,7 +27,8 @@ fn main() -> anyhow::Result<()> {
     // d=64 pushes the sweep to N≈16k (N²d matmuls get slow on CPU);
     // included only with TS_BENCH_FULL=1.
     let full = std::env::var("TS_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::cpu().ok();
+    let mut host_fallback = false;
     let ds: &[usize] = if quick {
         &[16]
     } else if full {
@@ -62,16 +67,30 @@ fn main() -> anyhow::Result<()> {
             let q = Tensor::randn(&[n, d], 1);
             let k = Tensor::randn(&[n, d], 2);
             let v = Tensor::randn(&[n, d], 3);
-            let mut time_of = |variant: EmitVariant| -> anyhow::Result<f64> {
-                let exe = emitter::compile_attention(&rt, variant, n, d, 1.0)?;
-                Ok(bench(format!("{variant:?}_n{n}_d{d}"), &cfg, || {
-                    emitter::run_attention(&exe, &q, &k, &v).unwrap();
+            let mut time_of = |variant: EmitVariant| -> f64 {
+                if let Some(rt) = &rt {
+                    if let Ok(exe) = emitter::compile_attention(rt, variant, n, d, 1.0) {
+                        return bench(format!("{variant:?}_n{n}_d{d}"), &cfg, || {
+                            emitter::run_attention(&exe, &q, &k, &v).unwrap();
+                        })
+                        .mean_s;
+                    }
+                }
+                // Stub backend: bench the pure-rust reference kernels.
+                host_fallback = true;
+                let hv = match variant {
+                    EmitVariant::Softmax => AttentionVariant::Softmax,
+                    EmitVariant::TaylorDirect => AttentionVariant::Direct,
+                    EmitVariant::TaylorEfficient => AttentionVariant::Efficient,
+                };
+                bench(format!("{variant:?}_n{n}_d{d}"), &cfg, || {
+                    std::hint::black_box(attention::run_variant(hv, &q, &k, &v, 1.0));
                 })
-                .mean_s)
+                .mean_s
             };
-            let ts = time_of(EmitVariant::Softmax)?;
-            let td = time_of(EmitVariant::TaylorDirect)?;
-            let te = time_of(EmitVariant::TaylorEfficient)?;
+            let ts = time_of(EmitVariant::Softmax);
+            let td = time_of(EmitVariant::TaylorDirect);
+            let te = time_of(EmitVariant::TaylorEfficient);
             t_dir.push(td);
             t_eff.push(te);
             let mem_d = memory::mib(memory::entries_direct(n as u64, d as u64), 4);
@@ -106,7 +125,14 @@ fn main() -> anyhow::Result<()> {
         println!("memory crossover (entry model): N1 = {n1:.0} — efficient wins beyond this");
     }
 
-    write_json("fig2_attention", &Json::Arr(all_series));
-    println!("\nwrote bench_out/fig2_attention.json");
+    let backend = if host_fallback { "host-reference" } else { "pjrt" };
+    write_json(
+        "fig2_attention",
+        &Json::from_pairs(vec![
+            ("backend", Json::Str(backend.to_string())),
+            ("series", Json::Arr(all_series)),
+        ]),
+    );
+    println!("\nwrote bench_out/fig2_attention.json (backend: {backend})");
     Ok(())
 }

@@ -1,0 +1,269 @@
+//! Causal (autoregressive) TaylorShift reference for the streaming
+//! decode path.
+//!
+//! [`causal_taylor`] computes, for every row `t`, the TaylorShift
+//! attention of query `t` over keys/values `0..=t` — exactly the
+//! function a decode session produces token-by-token, evaluated as one
+//! batch. Row `t` of the output equals the streaming output at prefix
+//! length `t + 1`, so a single full-length call is a reference for
+//! *every* prefix of a stream at once.
+//!
+//! **Lockstep invariant:** the arithmetic here deliberately replicates
+//! [`crate::decode::KvCache`] (rows before the promotion point) and
+//! [`crate::decode::RecurrentState`] (rows at and after it)
+//! operation-for-operation — the same f64 accumulation order, the same
+//! f32 rounding points (cached keys are stored as f32 after an f64
+//! norm), and the same `max(1e-12)` normalization guards. That makes
+//! the whole-model streaming-vs-batch parity tests exact rather than
+//! merely within a numerical tolerance: per-row ops (LayerNorm, MLP,
+//! projections) are shared code, and the attention rows agree because
+//! this file mirrors the decode state machines. If `decode/kv.rs` or
+//! `decode/recurrent.rs` changes its arithmetic, this file must change
+//! with it.
+
+use crate::tensor::Tensor;
+
+/// Taylor-moment accumulators mirroring `RecurrentState` (f64 state,
+/// unscaled `u = [1 | v]` rows; see `decode/recurrent.rs` for the
+/// derivation).
+struct Moments {
+    d: usize,
+    len: usize,
+    alpha: f64,
+    m0: Vec<f64>,
+    m1: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl Moments {
+    fn new(d: usize) -> Self {
+        let w = d + 1;
+        Self {
+            d,
+            len: 0,
+            alpha: (d as f64).powf(0.25),
+            m0: vec![0.0; w],
+            m1: vec![0.0; d * w],
+            m2: vec![0.0; d * d * w],
+        }
+    }
+
+    /// Mirror of `RecurrentState::append`.
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let (d, w) = (self.d, self.d + 1);
+        let norm = k.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = self.alpha / norm.max(1e-12);
+        let kn: Vec<f64> = k.iter().map(|&x| x as f64 * scale).collect();
+        let mut u = vec![0.0f64; w];
+        u[0] = 1.0;
+        for (c, &x) in v.iter().enumerate() {
+            u[c + 1] = x as f64;
+        }
+        for c in 0..w {
+            self.m0[c] += u[c];
+        }
+        for a in 0..d {
+            let ka = kn[a];
+            let row1 = &mut self.m1[a * w..(a + 1) * w];
+            for c in 0..w {
+                row1[c] += ka * u[c];
+            }
+            for b in 0..d {
+                let kab = ka * kn[b];
+                let row2 = &mut self.m2[(a * d + b) * w..(a * d + b + 1) * w];
+                for c in 0..w {
+                    row2[c] += kab * u[c];
+                }
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Mirror of `RecurrentState::query`.
+    fn query(&self, q: &[f32], tau: f64) -> Vec<f32> {
+        let (d, w) = (self.d, self.d + 1);
+        let norm = q.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let scale = self.alpha * tau / norm.max(1e-12);
+        let qn: Vec<f64> = q.iter().map(|&x| x as f64 * scale).collect();
+        let a2 = self.alpha * self.alpha;
+        let a4 = a2 * a2;
+        let mut y = vec![0.0f64; w];
+        for (c, out) in y.iter_mut().enumerate() {
+            *out = a4 * self.m0[c];
+        }
+        for a in 0..d {
+            let qa = qn[a];
+            let row1 = &self.m1[a * w..(a + 1) * w];
+            for (c, out) in y.iter_mut().enumerate() {
+                *out += a2 * qa * row1[c];
+            }
+            for b in 0..d {
+                let coef = 0.5 * qa * qn[b];
+                let row2 = &self.m2[(a * d + b) * w..(a * d + b + 1) * w];
+                for (c, out) in y.iter_mut().enumerate() {
+                    *out += coef * row2[c];
+                }
+            }
+        }
+        let denom = y[0];
+        let rescale = (self.len as f64 / d as f64).sqrt();
+        (0..d).map(|c| (y[c + 1] / denom * rescale) as f32).collect()
+    }
+}
+
+/// Causal TaylorShift attention for one head: row `t` of the output is
+/// query `t` attended over keys/values `0..=t`.
+///
+/// `promote_at` mirrors a decode session's KV→recurrent switch:
+///
+/// * `None` — every row is served from the KV formulation (a session
+///   that never crosses its threshold).
+/// * `Some(p)` — rows with prefix length `< p` are KV; at prefix `p`
+///   the cached (f32-rounded normalized key, raw value) pairs are
+///   replayed into Taylor moments, and rows with prefix `≥ p` are
+///   served recurrent. `Some(1)` (or `Some(0)`) is a session born on
+///   the recurrent branch.
+///
+/// The replay happens *before* token `p-1` (0-indexed) is absorbed, so
+/// the moments hold the f32-normalized keys of tokens `0..p-1` plus
+/// the raw keys of every later token — the exact state a promoted
+/// `DecodeSession` carries.
+pub fn causal_taylor(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    tau: f32,
+    promote_at: Option<usize>,
+) -> Tensor {
+    assert_eq!(q.shape(), k.shape(), "q/k shape mismatch");
+    assert_eq!(q.shape(), v.shape(), "q/v shape mismatch");
+    assert_eq!(q.rank(), 2, "causal_taylor expects [n, d]");
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    let tau64 = tau as f64;
+    let mut out = Tensor::zeros(&[n, d]);
+    // KV phase: keys stored f32-rounded after an f64 norm, exactly as
+    // `KvCache::append` stores them.
+    let mut keys: Vec<f32> = Vec::new();
+    let mut moments: Option<Moments> = None;
+    for t in 0..n {
+        let new_len = t + 1;
+        // Promote-then-append, as in `DecodeSession::step`: replay the
+        // cached normalized keys of tokens 0..t, then absorb token t raw.
+        if moments.is_none() && promote_at.is_some_and(|p| new_len >= p) {
+            let mut m = Moments::new(d);
+            for j in 0..t {
+                m.absorb(&keys[j * d..(j + 1) * d], v.row(j));
+            }
+            moments = Some(m);
+        }
+        if let Some(m) = moments.as_mut() {
+            m.absorb(k.row(t), v.row(t));
+            out.row_mut(t).copy_from_slice(&m.query(q.row(t), tau64));
+        } else {
+            // Mirror of `KvCache::append`.
+            let kr = k.row(t);
+            let norm = kr.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let scale = (1.0 / norm.max(1e-12)) as f32;
+            keys.extend(kr.iter().map(|&x| x * scale));
+            // Mirror of `KvCache::query` over rows 0..=t.
+            let qr = q.row(t);
+            let qnorm = qr.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let qscale = tau64 / qnorm.max(1e-12);
+            let qn: Vec<f64> = qr.iter().map(|&x| x as f64 * qscale).collect();
+            let mut num = vec![0.0f64; d];
+            let mut den = 0.0f64;
+            for j in 0..new_len {
+                let key = &keys[j * d..(j + 1) * d];
+                let mut s = 0.0f64;
+                for c in 0..d {
+                    s += qn[c] * key[c] as f64;
+                }
+                let w = 1.0 + s + 0.5 * s * s;
+                den += w;
+                let val = v.row(j);
+                for c in 0..d {
+                    num[c] += w * val[c] as f64;
+                }
+            }
+            let rescale = (new_len as f64 / d as f64).sqrt() / den.max(1e-12);
+            for (o, &x) in out.row_mut(t).iter_mut().zip(&num) {
+                *o = (x * rescale) as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::DecodeSession;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::randn(&[n, d], seed),
+            Tensor::randn(&[n, d], seed + 1),
+            Tensor::randn(&[n, d], seed + 2),
+        )
+    }
+
+    fn stream_rows(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        tau: f32,
+        crossover: Option<f64>,
+        start_recurrent: bool,
+    ) -> Tensor {
+        let (n, d) = (q.shape()[0], q.shape()[1]);
+        let mut session = DecodeSession::new(1, d, tau, start_recurrent);
+        let mut out = Tensor::zeros(&[n, d]);
+        for t in 0..n {
+            let row = |src: &Tensor| Tensor::new(&[1, d], src.row(t).to_vec());
+            let r = session.step(&row(q), &row(k), &row(v), crossover);
+            out.row_mut(t).copy_from_slice(&r.output);
+        }
+        out
+    }
+
+    /// The whole point of this module: every row must be *bitwise*
+    /// identical to what the decode state machines produce, for pure-KV,
+    /// born-recurrent, and mid-stream-promoted sessions alike.
+    #[test]
+    fn mirrors_decode_session_exactly() {
+        let (n, d, tau) = (24usize, 6usize, 1.2f32);
+        let (q, k, v) = qkv(n, d, 77);
+        for (promote_at, crossover, start_recurrent) in [
+            (None, None, false),
+            (Some(1), None, true),
+            (Some(9), Some(9.0), false),
+        ] {
+            let batch = causal_taylor(&q, &k, &v, tau, promote_at);
+            let stream = stream_rows(&q, &k, &v, tau, crossover, start_recurrent);
+            assert_eq!(
+                batch.data(),
+                stream.data(),
+                "promote_at={promote_at:?} must be bit-exact vs streaming"
+            );
+        }
+    }
+
+    /// Against the independent batch implementations the agreement is
+    /// numerical (different summation orders), not bitwise.
+    #[test]
+    fn last_row_matches_batch_variants() {
+        let (n, d, tau) = (32usize, 8usize, 0.9f32);
+        let (q, k, v) = qkv(n, d, 31);
+        let kv_rows = causal_taylor(&q, &k, &v, tau, None);
+        let want_dir = crate::attention::direct::taylor_direct(&q, &k, &v, tau, true);
+        let diff = Tensor::new(&[1, d], kv_rows.row(n - 1).to_vec())
+            .max_abs_diff(&Tensor::new(&[1, d], want_dir.row(n - 1).to_vec()));
+        assert!(diff < 1e-4, "KV row vs taylor_direct: {diff}");
+
+        let rec_rows = causal_taylor(&q, &k, &v, tau, Some(1));
+        let want_eff = crate::attention::efficient::taylor_efficient(&q, &k, &v, tau);
+        let diff = Tensor::new(&[1, d], rec_rows.row(n - 1).to_vec())
+            .max_abs_diff(&Tensor::new(&[1, d], want_eff.row(n - 1).to_vec()));
+        assert!(diff < 1e-4, "recurrent row vs taylor_efficient: {diff}");
+    }
+}

@@ -7,6 +7,7 @@
 //! paper's "(and Back)" — choosing direct `O(N²d)` or efficient
 //! `O(Nd³)` per sequence length.
 
+pub mod causal;
 pub mod direct;
 pub mod efficient;
 pub mod selector;

@@ -18,9 +18,17 @@ use std::time::Duration;
 ///   "max_batch": 8,
 ///   "max_delay_ms": 5,
 ///   "queue_limit": 256,
-///   "variant": "auto"
+///   "variant": "auto",
+///   "n_layers": 2,
+///   "d_ff": 128,
+///   "layer_taus": [1.0, 1.2],
+///   "model_seed": 42
 /// }
 /// ```
+///
+/// Streaming-model knobs (`n_layers`, `d_ff`, `layer_taus`,
+/// `model_seed`) shape the whole-model decode path; a non-empty
+/// `layer_taus` must have exactly `n_layers` entries.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -97,6 +105,35 @@ impl ServerConfig {
         if let Some(v) = j.get("max_sessions").and_then(|x| x.as_usize()) {
             engine.decode.max_sessions = v;
         }
+        // Streaming-model architecture (see model::ModelConfig).
+        if let Some(v) = j.get("n_layers").and_then(|x| x.as_usize()) {
+            engine.decode.n_layers = v;
+        }
+        if let Some(v) = j.get("d_ff").and_then(|x| x.as_usize()) {
+            engine.decode.d_ff = v;
+        }
+        if let Some(arr) = j.get("layer_taus").and_then(|x| x.as_arr()) {
+            engine.decode.layer_taus = arr
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|v| v as f32)
+                        .ok_or_else(|| anyhow!("layer_taus entries must be numbers"))
+                })
+                .collect::<Result<Vec<f32>>>()?;
+        }
+        if let Some(v) = j.get("model_seed").and_then(|x| x.as_f64()) {
+            engine.decode.model_seed = v as u64;
+        }
+        if !engine.decode.layer_taus.is_empty()
+            && engine.decode.layer_taus.len() != engine.decode.n_layers
+        {
+            return Err(anyhow!(
+                "layer_taus has {} entries but n_layers is {}",
+                engine.decode.layer_taus.len(),
+                engine.decode.n_layers
+            ));
+        }
         cfg.engine = engine;
         Ok(cfg)
     }
@@ -164,6 +201,32 @@ mod tests {
         assert!((c.engine.decode.tau - 1.5).abs() < 1e-6);
         assert_eq!(c.engine.decode.max_session_bytes, 2 << 20);
         assert_eq!(c.engine.decode.max_sessions, 7);
+    }
+
+    #[test]
+    fn parses_model_knobs() {
+        let j = Json::parse(
+            r#"{
+                "n_layers": 3,
+                "d_ff": 64,
+                "layer_taus": [0.8, 1.0, 1.2],
+                "model_seed": 7
+            }"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.engine.decode.n_layers, 3);
+        assert_eq!(c.engine.decode.d_ff, 64);
+        assert_eq!(c.engine.decode.layer_taus, vec![0.8, 1.0, 1.2]);
+        assert_eq!(c.engine.decode.model_seed, 7);
+    }
+
+    #[test]
+    fn layer_taus_length_must_match_layers() {
+        let j = Json::parse(r#"{"n_layers": 2, "layer_taus": [1.0]}"#).unwrap();
+        assert!(ServerConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"layer_taus": [1.0, "x"]}"#).unwrap();
+        assert!(ServerConfig::from_json(&j).is_err(), "non-numeric tau rejected");
     }
 
     #[test]

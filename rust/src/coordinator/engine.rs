@@ -8,13 +8,16 @@
 //! [`RegistryExecutor`] over the AOT artifacts; tests inject mocks to
 //! exercise the full request lifecycle without artifacts.
 //!
-//! Besides batched prefill/classification, the engine serves **streaming
-//! decode** (see `decode/`): `submit_stream` opens a per-session state
-//! cache on the engine thread, `decode_step` feeds one token's q/k/v and
-//! returns the attention output for the full prefix in O(1) (recurrent
-//! branch) or O(n) (KV branch) — the session store promotes KV→recurrent
-//! when the prefix crosses the selector's N₀. Decode steps ride a
-//! priority lane mixed ahead of due prefill batches each cycle.
+//! Besides batched prefill/classification, the engine serves
+//! **whole-model streaming decode** (see `model/`): `submit_stream`
+//! opens a per-session, per-layer state stack on the engine thread and
+//! `decode_step` threads one `[1, d_model]` token embedding through
+//! every transformer block of the store's deterministic
+//! [`crate::model::StreamingModel`]. Each layer's state promotes
+//! KV→recurrent independently when the prefix crosses the selector's
+//! N₀. Decode steps ride a priority lane mixed ahead of due prefill
+//! batches each cycle; a session LRU-evicted under the memory budget
+//! answers its next step with [`RequestError::NeedsReprefill`].
 
 use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
@@ -25,7 +28,8 @@ use crate::coordinator::request::{
 };
 use crate::coordinator::router::{Route, Router};
 use crate::data::batch::Buckets;
-use crate::decode::{DecodeConfig, SessionStore};
+use crate::decode::DecodeConfig;
+use crate::model::{SessionStore, StepMiss};
 use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -97,7 +101,7 @@ pub struct Engine {
     queue_limit: usize,
     next_id: AtomicU64,
     next_stream: AtomicU64,
-    /// Expected decode input shape, `[heads, head_dim]`.
+    /// Expected decode token shape, `[1, d_model]`.
     decode_shape: [usize; 2],
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -111,7 +115,7 @@ impl Engine {
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_layers(config.decode.n_layers));
         let in_flight = Arc::new(AtomicUsize::new(0));
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let thread_metrics = Arc::clone(&metrics);
@@ -143,7 +147,7 @@ impl Engine {
             queue_limit: config.queue_limit,
             next_id: AtomicU64::new(1),
             next_stream: AtomicU64::new(1),
-            decode_shape: [config.decode.heads, config.head_dim],
+            decode_shape: [1, config.decode.heads * config.head_dim],
             worker: Some(worker),
         })
     }
@@ -190,40 +194,30 @@ impl Engine {
         resp_rx.recv().map_err(|_| RequestError::Shutdown)?
     }
 
-    /// Submit one decode step (the new token's per-head q/k/v, each
-    /// `[heads, head_dim]`); the returned receiver yields the attention
-    /// output over the full prefix.
+    /// Submit one decode step (the next token's embedding row,
+    /// `[1, d_model]`); the returned receiver yields the final-block
+    /// output after the token has passed through every layer.
     pub fn submit_decode(
         &self,
         session: u64,
-        q: Tensor,
-        k: Tensor,
-        v: Tensor,
+        token: Tensor,
     ) -> Result<Receiver<Result<DecodeResponse, RequestError>>, RequestError> {
-        for t in [&q, &k, &v] {
-            if t.shape() != self.decode_shape.as_slice() {
-                return Err(RequestError::BadDecodeShape {
-                    expected: self.decode_shape,
-                    got: t.shape().to_vec(),
-                });
-            }
+        if token.shape() != self.decode_shape.as_slice() {
+            return Err(RequestError::BadDecodeShape {
+                expected: self.decode_shape,
+                got: token.shape().to_vec(),
+            });
         }
         let (resp_tx, resp_rx) = channel();
         self.tx
-            .send(Msg::Decode(DecodeRequest::new(session, q, k, v), resp_tx))
+            .send(Msg::Decode(DecodeRequest::new(session, token), resp_tx))
             .map_err(|_| RequestError::Shutdown)?;
         Ok(resp_rx)
     }
 
     /// Submit a decode step and block for its output.
-    pub fn decode_step(
-        &self,
-        session: u64,
-        q: Tensor,
-        k: Tensor,
-        v: Tensor,
-    ) -> Result<DecodeResponse, RequestError> {
-        let rx = self.submit_decode(session, q, k, v)?;
+    pub fn decode_step(&self, session: u64, token: Tensor) -> Result<DecodeResponse, RequestError> {
+        let rx = self.submit_decode(session, token)?;
         rx.recv().map_err(|_| RequestError::Shutdown)?
     }
 
@@ -343,7 +337,7 @@ fn engine_loop<E: BatchExecutor>(
                             Ok(StreamStats {
                                 session: id,
                                 tokens: s.tokens,
-                                branch: s.branch,
+                                branches: s.branches,
                                 bytes: s.bytes,
                                 promoted_at: s.promoted_at,
                             })
@@ -384,9 +378,16 @@ fn update_session_gauges(store: &SessionStore, metrics: &Metrics) {
     metrics
         .session_bytes
         .store(store.resident_bytes(), Ordering::Relaxed);
+    let (kv, recurrent) = store.layer_occupancy();
+    for (gauge, count) in metrics.layer_kv_sessions.iter().zip(kv) {
+        gauge.store(count, Ordering::Relaxed);
+    }
+    for (gauge, count) in metrics.layer_recurrent_sessions.iter().zip(recurrent) {
+        gauge.store(count, Ordering::Relaxed);
+    }
 }
 
-/// Serve one decode step from the session store and record metrics.
+/// Serve one whole-model decode step and record metrics.
 fn run_decode(
     store: &mut SessionStore,
     req: DecodeRequest,
@@ -395,12 +396,18 @@ fn run_decode(
 ) {
     // Metrics/gauges are updated BEFORE the response is sent so a
     // blocking caller observes a consistent snapshot on return.
-    match store.step(req.session, &req.q, &req.k, &req.v) {
-        Some(outcome) => {
+    let t_step = Instant::now();
+    match store.step(req.session, &req.token) {
+        Ok(outcome) => {
+            metrics.model_step_time.record(t_step.elapsed());
             metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-            if outcome.result.promoted {
-                metrics.promotions.fetch_add(1, Ordering::Relaxed);
-            }
+            let promoted_layers = outcome
+                .result
+                .layers
+                .iter()
+                .filter(|l| l.promoted)
+                .count() as u64;
+            metrics.promotions.fetch_add(promoted_layers, Ordering::Relaxed);
             metrics
                 .sessions_evicted
                 .fetch_add(outcome.evicted.len() as u64, Ordering::Relaxed);
@@ -411,15 +418,19 @@ fn run_decode(
                 session: req.session,
                 step: outcome.result.len,
                 output: outcome.result.output,
-                branch: outcome.result.branch,
-                promoted: outcome.result.promoted,
+                promoted: promoted_layers > 0,
+                layers: outcome.result.layers,
                 latency,
             }));
         }
-        None => {
+        Err(miss) => {
             metrics.decode_misses.fetch_add(1, Ordering::Relaxed);
             update_session_gauges(store, metrics);
-            let _ = responder.send(Err(RequestError::UnknownSession { id: req.session }));
+            let err = match miss {
+                StepMiss::Evicted => RequestError::NeedsReprefill { id: req.session },
+                StepMiss::Unknown => RequestError::UnknownSession { id: req.session },
+            };
+            let _ = responder.send(Err(err));
         }
     }
 }
@@ -807,99 +818,105 @@ mod tests {
         assert!(result.is_ok(), "drained on shutdown: {result:?}");
     }
 
-    // --- streaming decode ---
+    // --- whole-model streaming decode ---
 
     #[test]
     fn decode_stream_parity_and_promotion() {
-        let (heads, d, tau) = (2usize, 16usize, 1.0f32);
-        // Calibrated crossover at N₀=8 so the session starts on the KV
+        let (heads, d) = (2usize, 16usize);
+        // Calibrated crossover at N₀=8 so every layer starts on the KV
         // branch and promotes mid-stream.
+        let decode = DecodeConfig {
+            heads,
+            tau: 1.0,
+            ..DecodeConfig::default()
+        };
+        let n_layers = decode.n_layers;
         let (engine, _) = mock_engine(EngineConfig {
             head_dim: d,
             selector: Selector::calibrated(vec![(d, 8.0)]),
-            decode: DecodeConfig {
-                heads,
-                tau,
-                ..DecodeConfig::default()
-            },
+            decode: decode.clone(),
             ..Default::default()
         });
+        // Same deterministic weights the engine's store builds.
+        let model = crate::model::StreamingModel::new(
+            crate::model::ModelConfig::from_decode(&decode, d),
+        );
+        let dm = model.d_model();
+        let steps = 20usize;
+        let x = Tensor::randn(&[steps, dm], 424_242);
+        let batch = model.forward_batch(&x, &vec![Some(8); n_layers]);
+
         let sid = engine.submit_stream().unwrap();
-        // Per-head history for full-prefix reference recomputation.
-        let mut hist: Vec<[Vec<f32>; 3]> =
-            (0..heads).map(|_| [vec![], vec![], vec![]]).collect();
-        let steps = 20;
         for t in 0..steps {
-            let q = Tensor::randn(&[heads, d], 100 + t as u64);
-            let k = Tensor::randn(&[heads, d], 200 + t as u64);
-            let v = Tensor::randn(&[heads, d], 300 + t as u64);
-            let resp = engine
-                .decode_step(sid, q.clone(), k.clone(), v.clone())
-                .unwrap();
+            let token = Tensor::new(&[1, dm], x.row(t).to_vec());
+            let resp = engine.decode_step(sid, token).unwrap();
             assert_eq!(resp.step, t + 1);
             assert_eq!(resp.promoted, t + 1 == 8, "promotion exactly at N₀");
-            let expect_branch = if t + 1 < 8 {
-                AttentionVariant::Direct
-            } else {
-                AttentionVariant::Efficient
-            };
-            assert_eq!(resp.branch, expect_branch, "step {}", t + 1);
-            assert_eq!(resp.output.len(), heads * d);
-            for h in 0..heads {
-                hist[h][0].extend_from_slice(q.row(h));
-                hist[h][1].extend_from_slice(k.row(h));
-                hist[h][2].extend_from_slice(v.row(h));
-                let n = t + 1;
-                let qh = Tensor::new(&[n, d], hist[h][0].clone());
-                let kh = Tensor::new(&[n, d], hist[h][1].clone());
-                let vh = Tensor::new(&[n, d], hist[h][2].clone());
-                let reference = crate::attention::run_variant(resp.branch, &qh, &kh, &vh, tau);
-                let got = &resp.output[h * d..(h + 1) * d];
-                let want = reference.row(n - 1);
-                let err = got
-                    .iter()
-                    .zip(want)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0f32, f32::max);
-                assert!(err < 1e-4, "step {} head {h}: max err {err}", t + 1);
+            assert_eq!(resp.layers.len(), n_layers);
+            for (l, ls) in resp.layers.iter().enumerate() {
+                assert_eq!(ls.promoted, t + 1 == 8, "layer {l} step {}", t + 1);
+                let expect = if t + 1 < 8 {
+                    AttentionVariant::Direct
+                } else {
+                    AttentionVariant::Efficient
+                };
+                assert_eq!(ls.branch, expect, "layer {l} step {}", t + 1);
             }
+            assert_eq!(
+                resp.output.as_slice(),
+                batch.row(t),
+                "streaming row {} must match the batch forward pass",
+                t + 1
+            );
         }
         let m = engine.metrics();
         assert_eq!(m.decode_steps.load(Ordering::Relaxed), steps as u64);
-        assert_eq!(m.promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            m.promotions.load(Ordering::Relaxed),
+            n_layers as u64,
+            "every layer promoted once"
+        );
         assert_eq!(m.streams_opened.load(Ordering::Relaxed), 1);
         assert_eq!(m.decode_latency.count(), steps as u64);
+        assert_eq!(m.model_step_time.count(), steps as u64);
         assert!(m.sessions_resident.load(Ordering::Relaxed) == 1);
         assert!(m.session_bytes.load(Ordering::Relaxed) > 0);
+        // Per-layer gauges: the one session is recurrent at every layer.
+        // (Checked before close_stream — closing zeroes the gauges.)
+        for l in 0..n_layers {
+            assert_eq!(m.layer_kv_sessions[l].load(Ordering::Relaxed), 0);
+            assert_eq!(m.layer_recurrent_sessions[l].load(Ordering::Relaxed), 1);
+        }
 
         let stats = engine.close_stream(sid).unwrap();
         assert_eq!(stats.tokens, steps);
-        assert_eq!(stats.branch, AttentionVariant::Efficient);
-        assert_eq!(stats.promoted_at, Some(8));
+        assert_eq!(stats.branches, vec![AttentionVariant::Efficient; n_layers]);
+        assert_eq!(stats.promoted_at, vec![Some(8); n_layers]);
         assert_eq!(m.streams_closed.load(Ordering::Relaxed), 1);
         assert_eq!(m.sessions_resident.load(Ordering::Relaxed), 0);
-        // Double close and post-close decode both miss.
+        // Double close and post-close decode both miss as Unknown
+        // (closed normally, not evicted).
         assert!(matches!(
             engine.close_stream(sid),
             Err(RequestError::UnknownSession { .. })
         ));
-        let q = Tensor::randn(&[heads, d], 1);
-        let err = engine.decode_step(sid, q.clone(), q.clone(), q).unwrap_err();
+        let err = engine
+            .decode_step(sid, Tensor::randn(&[1, dm], 1))
+            .unwrap_err();
         assert!(matches!(err, RequestError::UnknownSession { .. }));
         assert_eq!(m.decode_misses.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn decode_shape_validated_at_submit() {
-        let (engine, _) = mock_engine(EngineConfig::default()); // heads=4, d=16
+        // Default config: heads=4, head_dim=16 ⇒ d_model=64.
+        let (engine, _) = mock_engine(EngineConfig::default());
         let bad = Tensor::randn(&[2, 16], 1);
-        let err = engine
-            .submit_decode(1, bad.clone(), bad.clone(), bad)
-            .unwrap_err();
+        let err = engine.submit_decode(1, bad).unwrap_err();
         assert!(matches!(
             err,
             RequestError::BadDecodeShape {
-                expected: [4, 16],
+                expected: [1, 64],
                 ..
             }
         ));
@@ -915,17 +932,19 @@ mod tests {
             },
             ..Default::default()
         });
-        let s1 = engine.submit_stream().unwrap();
         let mk = |seed| Tensor::randn(&[1, 16], seed);
-        engine.decode_step(s1, mk(1), mk(2), mk(3)).unwrap();
+        let s1 = engine.submit_stream().unwrap();
+        engine.decode_step(s1, mk(1)).unwrap();
         let s2 = engine.submit_stream().unwrap();
-        // s1 was evicted to make room for s2.
-        let err = engine.decode_step(s1, mk(4), mk(5), mk(6)).unwrap_err();
-        assert!(matches!(err, RequestError::UnknownSession { .. }));
-        engine.decode_step(s2, mk(7), mk(8), mk(9)).unwrap();
+        // s1 was evicted to make room for s2: its state is gone and the
+        // caller must re-prefill (typed error, not a silent fresh state).
+        let err = engine.decode_step(s1, mk(4)).unwrap_err();
+        assert_eq!(err, RequestError::NeedsReprefill { id: s1 });
+        engine.decode_step(s2, mk(7)).unwrap();
         let m = engine.metrics();
         assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 1);
         assert_eq!(m.streams_opened.load(Ordering::Relaxed), 2);
+        assert_eq!(m.decode_misses.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -941,10 +960,9 @@ mod tests {
         let mut decode_rxs = Vec::new();
         let mut infer_rxs = Vec::new();
         for t in 0..5u64 {
-            let mk = |seed| Tensor::randn(&[1, 16], seed);
             decode_rxs.push(
                 engine
-                    .submit_decode(sid, mk(t), mk(10 + t), mk(20 + t))
+                    .submit_decode(sid, Tensor::randn(&[1, 16], t))
                     .unwrap(),
             );
             infer_rxs.push(engine.submit(vec![1; 50]).unwrap());

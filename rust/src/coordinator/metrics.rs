@@ -102,15 +102,32 @@ pub struct Metrics {
     pub sessions_evicted: AtomicU64,
     /// Gauge: sessions currently resident in the store.
     pub sessions_resident: AtomicU64,
-    /// Gauge: bytes held by resident session state.
+    /// Gauge: bytes held by resident session state (all layers summed).
     pub session_bytes: AtomicU64,
     /// Per-token decode latency (submit → response).
     pub decode_latency: LatencyHistogram,
+    /// Whole-model per-token step time (store.step only, excluding
+    /// queueing).
+    pub model_step_time: LatencyHistogram,
+    /// Gauge per layer: resident sessions served on the KV branch.
+    pub layer_kv_sessions: Vec<AtomicU64>,
+    /// Gauge per layer: resident sessions served recurrent.
+    pub layer_recurrent_sessions: Vec<AtomicU64>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Metrics with per-layer branch-occupancy gauges sized for an
+    /// `n_layers`-deep streaming model.
+    pub fn with_layers(n_layers: usize) -> Self {
+        Self {
+            layer_kv_sessions: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
+            layer_recurrent_sessions: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
+            ..Self::default()
+        }
     }
 
     pub fn record_variant(&self, v: crate::attention::AttentionVariant) {
@@ -131,6 +148,11 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
     }
 
+    /// Snapshot of a gauge vector, e.g. `[3, 0, 1]`.
+    fn gauge_vec(gauges: &[AtomicU64]) -> Vec<u64> {
+        gauges.iter().map(|g| g.load(Ordering::Relaxed)).collect()
+    }
+
     /// Human-readable summary block: one report covering the batch
     /// path, the per-variant split, and the streaming-decode state.
     pub fn summary(&self) -> String {
@@ -140,10 +162,12 @@ impl Metrics {
              variants: direct={} efficient={} softmax={}\n\
              decode: steps={} misses={} promotions={}\n\
              sessions: opened={} closed={} evicted={} resident={} bytes={}\n\
+             layers: kv={:?} recurrent={:?}\n\
              latency: mean={:?} p50={:?} p99={:?}\n\
              queue_wait: mean={:?} p99={:?}\n\
              exec: mean={:?} p99={:?}\n\
-             decode_latency: mean={:?} p50={:?} p99={:?}",
+             decode_latency: mean={:?} p50={:?} p99={:?}\n\
+             model_step: mean={:?} p50={:?} p99={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -161,6 +185,8 @@ impl Metrics {
             self.sessions_evicted.load(Ordering::Relaxed),
             self.sessions_resident.load(Ordering::Relaxed),
             self.session_bytes.load(Ordering::Relaxed),
+            Self::gauge_vec(&self.layer_kv_sessions),
+            Self::gauge_vec(&self.layer_recurrent_sessions),
             self.latency.mean(),
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
@@ -171,6 +197,9 @@ impl Metrics {
             self.decode_latency.mean(),
             self.decode_latency.quantile(0.5),
             self.decode_latency.quantile(0.99),
+            self.model_step_time.mean(),
+            self.model_step_time.quantile(0.5),
+            self.model_step_time.quantile(0.99),
         )
     }
 
@@ -229,10 +258,26 @@ impl Metrics {
                     ("bytes", n(&self.session_bytes)),
                 ]),
             ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layer_kv_sessions
+                        .iter()
+                        .zip(&self.layer_recurrent_sessions)
+                        .map(|(kv, rec)| {
+                            Json::from_pairs(vec![
+                                ("kv", Json::Num(kv.load(Ordering::Relaxed) as f64)),
+                                ("recurrent", Json::Num(rec.load(Ordering::Relaxed) as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("latency", hist(&self.latency)),
             ("queue_wait", hist(&self.queue_wait)),
             ("exec", hist(&self.exec_time)),
             ("decode_latency", hist(&self.decode_latency)),
+            ("model_step", hist(&self.model_step_time)),
         ])
     }
 }
@@ -298,6 +343,22 @@ mod tests {
         ] {
             assert!(s.contains(needle), "summary missing {needle:?}:\n{s}");
         }
+    }
+
+    #[test]
+    fn with_layers_sizes_gauges_and_reports_them() {
+        let m = Metrics::with_layers(3);
+        assert_eq!(m.layer_kv_sessions.len(), 3);
+        assert_eq!(m.layer_recurrent_sessions.len(), 3);
+        m.layer_kv_sessions[0].store(2, Ordering::Relaxed);
+        m.layer_recurrent_sessions[2].store(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("layers: kv=[2, 0, 0] recurrent=[0, 0, 1]"), "{s}");
+        let parsed = crate::util::json::Json::parse(&m.to_json().to_string()).unwrap();
+        let layers = parsed.get("layers").and_then(|l| l.as_arr()).unwrap();
+        assert_eq!(layers.len(), 3);
+        assert_eq!(layers[0].get("kv").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(layers[2].get("recurrent").and_then(|x| x.as_f64()), Some(1.0));
     }
 
     #[test]

@@ -19,11 +19,14 @@
 //! bucket with zero accuracy cost — Section 6's closing argument,
 //! realized as a scheduling policy.
 //!
-//! The same crossover logic drives the **streaming decode** path
-//! (`decode/`): `Engine::submit_stream` + `Engine::decode_step` serve
-//! per-token attention from resident session state (KV cache below N₀,
-//! recurrent moments above it), mixed into the engine cycle ahead of
-//! due prefill batches via a bounded priority lane.
+//! The same crossover logic drives the **whole-model streaming decode**
+//! path (`model/`, `decode/`): `Engine::submit_stream` +
+//! `Engine::decode_step` thread one token embedding through every
+//! transformer block of a resident per-layer state stack (KV cache
+//! below N₀, recurrent moments above it — each layer crossing
+//! independently), mixed into the engine cycle ahead of due prefill
+//! batches via a bounded priority lane. Sessions evicted under the
+//! memory budget answer their next step with a typed re-prefill error.
 
 pub mod batcher;
 pub mod engine;

@@ -47,29 +47,21 @@ impl InferResponse {
     }
 }
 
-/// One autoregressive decode step for a streaming session: the new
-/// token's per-head projections, `[heads, head_dim]` each.
+/// One autoregressive decode step for a streaming session: the next
+/// token's embedding row, `[1, d_model]`. The engine's model projects
+/// it to per-head q/k/v inside every layer.
 #[derive(Clone, Debug)]
 pub struct DecodeRequest {
     pub session: u64,
-    pub q: crate::tensor::Tensor,
-    pub k: crate::tensor::Tensor,
-    pub v: crate::tensor::Tensor,
+    pub token: crate::tensor::Tensor,
     pub enqueued_at: Instant,
 }
 
 impl DecodeRequest {
-    pub fn new(
-        session: u64,
-        q: crate::tensor::Tensor,
-        k: crate::tensor::Tensor,
-        v: crate::tensor::Tensor,
-    ) -> Self {
+    pub fn new(session: u64, token: crate::tensor::Tensor) -> Self {
         Self {
             session,
-            q,
-            k,
-            v,
+            token,
             enqueued_at: Instant::now(),
         }
     }
@@ -81,12 +73,12 @@ pub struct DecodeResponse {
     pub session: u64,
     /// Prefix length after this token.
     pub step: usize,
-    /// Concatenated per-head attention outputs, length `heads·head_dim`.
+    /// Final-block output row, length `d_model`.
     pub output: Vec<f32>,
-    /// Branch that served this step (Direct = KV cache, Efficient =
-    /// recurrent state).
-    pub branch: crate::attention::AttentionVariant,
-    /// True iff this step crossed N₀ and promoted the session KV→recurrent.
+    /// Per-layer branch/promotion records for this step.
+    pub layers: Vec<crate::model::LayerStep>,
+    /// True iff any layer crossed N₀ and promoted KV→recurrent on
+    /// this step.
     pub promoted: bool,
     /// Total latency: submit → response.
     pub latency: std::time::Duration,
@@ -98,12 +90,13 @@ pub struct StreamStats {
     pub session: u64,
     /// Tokens decoded over the stream's lifetime.
     pub tokens: usize,
-    /// Branch at close time.
-    pub branch: crate::attention::AttentionVariant,
-    /// Resident state bytes at close time.
+    /// Branch serving each layer at close time.
+    pub branches: Vec<crate::attention::AttentionVariant>,
+    /// Resident state bytes at close time, all layers summed.
     pub bytes: u64,
-    /// Prefix length at which the session was promoted, if it was.
-    pub promoted_at: Option<usize>,
+    /// Per-layer prefix lengths at which layers promoted (`None` =
+    /// layer stayed on the KV branch).
+    pub promoted_at: Vec<Option<usize>>,
 }
 
 /// Why a request was rejected or failed.
@@ -119,10 +112,14 @@ pub enum RequestError {
     Shutdown,
     /// PJRT execution failed.
     ExecFailed(String),
-    /// Decode step for a session that is not resident (never opened,
-    /// closed, or LRU-evicted) — the caller must re-prefill.
+    /// Decode step for a session that was never opened or was closed
+    /// normally.
     UnknownSession { id: u64 },
-    /// Decode inputs had the wrong shape for the configured heads/dim.
+    /// Decode step for a session LRU-evicted under memory pressure —
+    /// its state is gone and the caller must re-prefill before
+    /// streaming again.
+    NeedsReprefill { id: u64 },
+    /// Decode inputs had the wrong shape for the configured model.
     BadDecodeShape { expected: [usize; 2], got: Vec<usize> },
 }
 
@@ -137,7 +134,13 @@ impl std::fmt::Display for RequestError {
             Self::Shutdown => write!(f, "engine shut down"),
             Self::ExecFailed(e) => write!(f, "execution failed: {e}"),
             Self::UnknownSession { id } => {
-                write!(f, "unknown decode session {id} (closed or evicted)")
+                write!(f, "unknown decode session {id} (never opened or closed)")
+            }
+            Self::NeedsReprefill { id } => {
+                write!(
+                    f,
+                    "decode session {id} was evicted under memory pressure; re-prefill required"
+                )
             }
             Self::BadDecodeShape { expected, got } => {
                 write!(f, "decode input shape {got:?}, expected {expected:?}")
@@ -173,6 +176,8 @@ mod tests {
         assert!(e.to_string().contains("overloaded"));
         let e = RequestError::UnknownSession { id: 42 };
         assert!(e.to_string().contains("42"));
+        let e = RequestError::NeedsReprefill { id: 7 };
+        assert!(e.to_string().contains("re-prefill"));
         let e = RequestError::BadDecodeShape {
             expected: [4, 16],
             got: vec![2, 16],

@@ -2,7 +2,7 @@
 //!
 //! One-shot inference picks between direct- and efficient-TaylorShift
 //! per request (`attention/selector.rs`). At decode time the same
-//! crossover governs *what state to cache per session*:
+//! crossover governs *what state to cache per layer, per session*:
 //!
 //! * **Below N₀(d)** — the direct branch with a [`KvCache`]: keep the
 //!   normalized keys and raw values, O(N·d) state, O(N·d) per token.
@@ -15,14 +15,22 @@
 //! (a one-time O(N·d³) replay of the cache). Both branches compute the
 //! same attention function, so the emitted token stream is continuous
 //! across the switch — the "(and Back)" policy applied while decoding.
+//! The promotion invariants (what the replay covers, how the promoting
+//! token is absorbed, and the batch-side mirror that makes
+//! streaming-vs-batch parity exact) are spelled out in
+//! `attention/causal.rs` and `model/`.
 //!
-//! [`SessionStore`] keeps many sessions resident under a configurable
-//! byte budget with LRU eviction, accounted via `analysis/memory.rs`.
-//! The serving integration lives in `coordinator/engine.rs`
-//! (`submit_stream` / `decode_step` / `close_stream`), which mixes
-//! decode steps with batched prefill through a priority lane in
-//! `coordinator/batcher.rs` and reports occupancy, promotions,
-//! evictions, and per-token latency through `coordinator/metrics.rs`.
+//! This module owns the *per-layer* state machinery. Whole-model
+//! streaming — a stack of these sessions, one per transformer block,
+//! each crossing N₀(d) independently — lives in [`crate::model`]:
+//! [`crate::model::ModelSession`] is the per-layer stack and
+//! [`crate::model::SessionStore`] keeps many of them resident under a
+//! byte budget (summed across layers) with LRU eviction. The serving
+//! integration lives in `coordinator/engine.rs` (`submit_stream` /
+//! `decode_step` / `close_stream`), which mixes decode steps with
+//! batched prefill through a priority lane in `coordinator/batcher.rs`
+//! and reports occupancy, promotions, evictions, and per-token latency
+//! through `coordinator/metrics.rs`.
 
 pub mod kv;
 pub mod recurrent;
@@ -30,6 +38,4 @@ pub mod session;
 
 pub use kv::KvCache;
 pub use recurrent::RecurrentState;
-pub use session::{
-    DecodeConfig, DecodeSession, SessionStore, SessionSummary, StepOutcome, StepResult,
-};
+pub use session::{DecodeConfig, DecodeSession, StepResult};

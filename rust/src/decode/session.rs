@@ -1,7 +1,8 @@
-//! Per-session decode state and the LRU session store.
+//! Per-layer decode state: one streaming attention context.
 //!
-//! A [`DecodeSession`] holds one multi-head streaming context. It
-//! starts on the branch the [`Selector`] picks for a length-1 prefix
+//! A [`DecodeSession`] holds one multi-head streaming context — in the
+//! whole-model path, *one transformer layer's* attention state. It
+//! starts on the branch the selector picks for a length-1 prefix
 //! (direct/KV below the crossover) and is *promoted* to the recurrent
 //! moment state when its length crosses N₀(d) — the paper's "(and
 //! Back)" switch applied at decode time. Promotion replays the cached
@@ -9,16 +10,13 @@
 //! two branches compute the same function, the output stream is
 //! continuous across the switch.
 //!
-//! The [`SessionStore`] keeps many sessions resident under a byte
-//! budget, accounted through `analysis/memory.rs` entry counts, and
-//! evicts least-recently-used sessions when the budget (or a session
-//! count cap) is exceeded.
-
-use std::collections::HashMap;
+//! Residency (LRU eviction under a byte budget) lives one level up:
+//! [`crate::model::SessionStore`] keeps whole-model
+//! [`crate::model::ModelSession`]s — stacks of these per-layer
+//! sessions — resident, with byte accounting summed across layers.
 
 use super::kv::KvCache;
 use super::recurrent::RecurrentState;
-use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
 use crate::tensor::Tensor;
 
@@ -27,8 +25,18 @@ use crate::tensor::Tensor;
 pub struct DecodeConfig {
     /// Attention heads per streaming session.
     pub heads: usize,
-    /// Temperature shared by both branches.
+    /// Temperature shared by both branches (broadcast to every layer
+    /// unless `layer_taus` is set).
     pub tau: f32,
+    /// Transformer blocks in the streaming model.
+    pub n_layers: usize,
+    /// Hidden width of each block's MLP.
+    pub d_ff: usize,
+    /// Optional per-layer temperatures; empty broadcasts `tau`. When
+    /// non-empty its length must equal `n_layers`.
+    pub layer_taus: Vec<f32>,
+    /// Weight-init seed for the deterministic streaming model.
+    pub model_seed: u64,
     /// Total resident-state budget across sessions, in bytes.
     pub max_session_bytes: u64,
     /// Hard cap on resident sessions regardless of bytes.
@@ -43,6 +51,10 @@ impl Default for DecodeConfig {
         Self {
             heads: 4,
             tau: 1.0,
+            n_layers: 2,
+            d_ff: 128,
+            layer_taus: Vec::new(),
+            model_seed: 42,
             max_session_bytes: 64 << 20,
             max_sessions: 256,
             max_steps_per_cycle: 64,
@@ -68,15 +80,13 @@ pub struct StepResult {
     pub len: usize,
 }
 
-/// One multi-head streaming decode context.
+/// One multi-head streaming decode context (one layer's state).
 pub struct DecodeSession {
     heads: usize,
     d: usize,
     len: usize,
     branch: Branch,
     promoted_at: Option<usize>,
-    bytes: u64,
-    last_used: u64,
 }
 
 impl DecodeSession {
@@ -89,17 +99,13 @@ impl DecodeSession {
         } else {
             Branch::Kv((0..heads).map(|_| KvCache::new(d, tau)).collect())
         };
-        let mut s = Self {
+        Self {
             heads,
             d,
             len: 0,
             branch,
             promoted_at: None,
-            bytes: 0,
-            last_used: 0,
-        };
-        s.bytes = s.state_bytes();
-        s
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -126,7 +132,8 @@ impl DecodeSession {
         }
     }
 
-    /// Prefix length at which the session switched to recurrent state.
+    /// Prefix length at which the session switched to recurrent state
+    /// (the length *including* the promoting token).
     pub fn promoted_at(&self) -> Option<usize> {
         self.promoted_at
     }
@@ -159,7 +166,6 @@ impl DecodeSession {
             .collect();
         self.branch = Branch::Recurrent(states);
         self.promoted_at = Some(self.len);
-        self.bytes = self.state_bytes();
         true
     }
 
@@ -191,6 +197,11 @@ impl DecodeSession {
             }
             _ => false,
         };
+        if promoted {
+            // `promote()` ran before the length bump; the recorded
+            // prefix must include the promoting token.
+            self.promoted_at = Some(new_len);
+        }
         let mut output = Vec::with_capacity(self.heads * self.d);
         match &mut self.branch {
             Branch::Kv(caches) => {
@@ -205,169 +216,12 @@ impl DecodeSession {
             }
         }
         self.len = new_len;
-        self.bytes = self.state_bytes();
         StepResult {
             output,
             branch: self.branch(),
             promoted,
             len: new_len,
         }
-    }
-}
-
-/// Closing summary for a finished session.
-#[derive(Clone, Debug)]
-pub struct SessionSummary {
-    pub tokens: usize,
-    pub branch: AttentionVariant,
-    pub bytes: u64,
-    pub promoted_at: Option<usize>,
-}
-
-/// Outcome of a store-level decode step.
-pub struct StepOutcome {
-    pub result: StepResult,
-    /// Sessions LRU-evicted to make room during this operation.
-    pub evicted: Vec<u64>,
-}
-
-/// LRU-evicting, byte-budgeted collection of resident decode sessions.
-pub struct SessionStore {
-    cfg: DecodeConfig,
-    head_dim: usize,
-    selector: Selector,
-    forced: Option<AttentionVariant>,
-    sessions: HashMap<u64, DecodeSession>,
-    clock: u64,
-    resident_bytes: u64,
-}
-
-impl SessionStore {
-    /// `forced` mirrors the engine's variant override: `Direct` pins
-    /// sessions to the KV path (never promote), `Efficient` starts
-    /// them recurrent. `Softmax` has no streaming form and falls back
-    /// to the selector policy.
-    pub fn new(
-        cfg: DecodeConfig,
-        head_dim: usize,
-        selector: Selector,
-        forced: Option<AttentionVariant>,
-    ) -> Self {
-        Self {
-            cfg,
-            head_dim,
-            selector,
-            forced,
-            sessions: HashMap::new(),
-            clock: 0,
-            resident_bytes: 0,
-        }
-    }
-
-    pub fn config(&self) -> &DecodeConfig {
-        &self.cfg
-    }
-
-    /// Resident session count.
-    pub fn len(&self) -> usize {
-        self.sessions.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
-    }
-
-    /// Total bytes held by resident session state.
-    pub fn resident_bytes(&self) -> u64 {
-        self.resident_bytes
-    }
-
-    pub fn contains(&self, id: u64) -> bool {
-        self.sessions.contains_key(&id)
-    }
-
-    /// Crossover threshold governing KV→recurrent promotion, if any.
-    fn promotion_threshold(&self) -> Option<f64> {
-        match self.forced {
-            Some(AttentionVariant::Direct) | Some(AttentionVariant::Efficient) => None,
-            _ => Some(self.selector.crossover(self.head_dim)),
-        }
-    }
-
-    /// Open (or reset) a session. Returns ids evicted to fit it.
-    pub fn open(&mut self, id: u64) -> Vec<u64> {
-        let start_recurrent = match self.forced {
-            Some(AttentionVariant::Efficient) => true,
-            Some(AttentionVariant::Direct) => false,
-            // Selector policy: the branch a length-1 prefix would get.
-            _ => self.selector.select(1, self.head_dim) == AttentionVariant::Efficient,
-        };
-        if let Some(old) = self.sessions.remove(&id) {
-            self.resident_bytes -= old.bytes;
-        }
-        let mut session =
-            DecodeSession::new(self.cfg.heads, self.head_dim, self.cfg.tau, start_recurrent);
-        self.clock += 1;
-        session.last_used = self.clock;
-        self.resident_bytes += session.bytes;
-        self.sessions.insert(id, session);
-        self.enforce_budget(Some(id))
-    }
-
-    /// One decode step for session `id`. `None` if the session is not
-    /// resident (never opened, closed, or evicted).
-    pub fn step(&mut self, id: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Option<StepOutcome> {
-        let threshold = self.promotion_threshold();
-        self.clock += 1;
-        let clock = self.clock;
-        let session = self.sessions.get_mut(&id)?;
-        let before = session.bytes;
-        let result = session.step(q, k, v, threshold);
-        let after = session.bytes;
-        session.last_used = clock;
-        // `before` is included in the resident total, so this never underflows.
-        self.resident_bytes = self.resident_bytes - before + after;
-        let evicted = self.enforce_budget(Some(id));
-        Some(StepOutcome { result, evicted })
-    }
-
-    /// Drop a session, returning its closing summary.
-    pub fn close(&mut self, id: u64) -> Option<SessionSummary> {
-        let session = self.sessions.remove(&id)?;
-        self.resident_bytes -= session.bytes;
-        Some(SessionSummary {
-            tokens: session.len,
-            branch: session.branch(),
-            bytes: session.bytes,
-            promoted_at: session.promoted_at,
-        })
-    }
-
-    /// Evict LRU sessions until both the byte budget and the session
-    /// cap hold. The session named by `protect` (the one being
-    /// operated on) is never evicted.
-    fn enforce_budget(&mut self, protect: Option<u64>) -> Vec<u64> {
-        let mut evicted = Vec::new();
-        loop {
-            let over_bytes = self.resident_bytes > self.cfg.max_session_bytes;
-            let over_count = self.sessions.len() > self.cfg.max_sessions;
-            if !over_bytes && !over_count {
-                break;
-            }
-            let victim = self
-                .sessions
-                .iter()
-                .filter(|(id, _)| Some(**id) != protect)
-                .min_by_key(|(_, s)| s.last_used)
-                .map(|(id, _)| *id);
-            let Some(victim) = victim else {
-                break; // only the protected session remains
-            };
-            let gone = self.sessions.remove(&victim).expect("victim resident");
-            self.resident_bytes -= gone.bytes;
-            evicted.push(victim);
-        }
-        evicted
     }
 }
 
@@ -431,116 +285,15 @@ mod tests {
     }
 
     #[test]
-    fn store_evicts_lru_under_byte_budget() {
-        let d = 8usize;
-        let cfg = DecodeConfig {
-            heads: 1,
-            // Room for roughly two KV sessions of ~12 tokens each.
-            max_session_bytes: 2 * 12 * 2 * d as u64 * 4,
-            max_sessions: 16,
-            ..DecodeConfig::default()
-        };
-        let mut store = SessionStore::new(cfg, d, Selector::analytical(), Some(AttentionVariant::Direct));
-        let (q, k, v) = qkv(1, d, 7);
-        store.open(1);
-        store.open(2);
-        store.open(3);
-        let mut all_evicted = Vec::new();
-        for _ in 0..12 {
-            for id in [1u64, 2, 3] {
-                if store.contains(id) {
-                    let out = store.step(id, &q, &k, &v).unwrap();
-                    all_evicted.extend(out.evicted);
-                }
-            }
-        }
-        assert!(!all_evicted.is_empty(), "budget never triggered eviction");
-        assert!(store.resident_bytes() <= store.config().max_session_bytes);
-        // Evicted sessions are gone: step returns None.
-        let gone = all_evicted[0];
-        assert!(store.step(gone, &q, &k, &v).is_none());
-    }
-
-    #[test]
-    fn store_caps_session_count() {
-        let cfg = DecodeConfig {
-            heads: 1,
-            max_sessions: 2,
-            ..DecodeConfig::default()
-        };
-        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
-        assert!(store.open(1).is_empty());
-        assert!(store.open(2).is_empty());
-        let evicted = store.open(3);
-        assert_eq!(evicted, vec![1], "oldest session evicted");
-        assert_eq!(store.len(), 2);
-    }
-
-    #[test]
-    fn lru_order_follows_use_not_creation() {
-        let cfg = DecodeConfig {
-            heads: 1,
-            max_sessions: 2,
-            ..DecodeConfig::default()
-        };
-        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
-        let (q, k, v) = qkv(1, 4, 9);
-        store.open(1);
-        store.open(2);
-        store.step(1, &q, &k, &v).unwrap(); // 1 is now most recent
-        let evicted = store.open(3);
-        assert_eq!(evicted, vec![2]);
-        assert!(store.contains(1) && store.contains(3));
-    }
-
-    #[test]
-    fn forced_direct_never_promotes() {
-        let mut store = SessionStore::new(
-            DecodeConfig { heads: 1, ..DecodeConfig::default() },
-            2, // crossover N0(2) is tiny — would promote immediately
-            Selector::analytical(),
-            Some(AttentionVariant::Direct),
-        );
-        let (q, k, v) = qkv(1, 2, 3);
-        store.open(5);
-        for _ in 0..32 {
-            let out = store.step(5, &q, &k, &v).unwrap();
-            assert_eq!(out.result.branch, AttentionVariant::Direct);
-            assert!(!out.result.promoted);
-        }
-    }
-
-    #[test]
-    fn forced_efficient_starts_recurrent() {
-        let mut store = SessionStore::new(
-            DecodeConfig { heads: 1, ..DecodeConfig::default() },
-            16,
-            Selector::analytical(),
-            Some(AttentionVariant::Efficient),
-        );
-        let (q, k, v) = qkv(1, 16, 4);
-        store.open(5);
-        let out = store.step(5, &q, &k, &v).unwrap();
-        assert_eq!(out.result.branch, AttentionVariant::Efficient);
-        assert!(!out.result.promoted, "no promotion event when born recurrent");
-    }
-
-    #[test]
-    fn close_reports_summary_and_frees_bytes() {
-        let mut store = SessionStore::new(
-            DecodeConfig { heads: 2, ..DecodeConfig::default() },
-            4,
-            Selector::analytical(),
-            None,
-        );
-        let (q, k, v) = qkv(2, 4, 11);
-        store.open(9);
-        for _ in 0..3 {
-            store.step(9, &q, &k, &v).unwrap();
-        }
-        let summary = store.close(9).unwrap();
-        assert_eq!(summary.tokens, 3);
-        assert_eq!(store.resident_bytes(), 0);
-        assert!(store.close(9).is_none());
+    fn state_bytes_track_branch() {
+        let mut session = DecodeSession::new(1, 4, 1.0, false);
+        let empty_kv = session.state_bytes();
+        let (q, k, v) = qkv(1, 4, 21);
+        session.step(&q, &k, &v, None);
+        assert!(session.state_bytes() > empty_kv, "KV bytes grow with tokens");
+        session.promote();
+        let recurrent = session.state_bytes();
+        session.step(&q, &k, &v, None);
+        assert_eq!(session.state_bytes(), recurrent, "recurrent bytes are flat");
     }
 }

@@ -51,6 +51,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod model;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;

@@ -1,0 +1,255 @@
+//! One transformer block: pre-LN → TaylorShift multi-head attention →
+//! residual → pre-LN → MLP (GELU) → residual.
+//!
+//! The block exposes two evaluation paths over the *same* weights:
+//!
+//! * [`Block::forward_batch`] — causal attention over an `[n, d_model]`
+//!   prefix via [`causal_taylor`], the whole-sequence reference;
+//! * [`Block::stream_step`] — one `[1, d_model]` token against a
+//!   resident [`DecodeSession`] (KV cache or recurrent moments).
+//!
+//! Every non-attention op here (LayerNorm, projections, bias add,
+//! GELU, residuals) is computed per row, and `Tensor::matmul`
+//! accumulates each output row independently of the batch size — so
+//! the two paths agree *bitwise* on every row, which is what the
+//! whole-model parity tests rely on.
+
+use crate::attention::causal::causal_taylor;
+use crate::decode::session::{DecodeSession, StepResult};
+use crate::tensor::Tensor;
+
+/// Row-wise LayerNorm with learned gain/bias; statistics in f64.
+pub fn layer_norm(x: &Tensor, gamma: &[f32], beta: &[f32]) -> Tensor {
+    assert_eq!(x.rank(), 2, "layer_norm expects [n, d]");
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    assert_eq!(gamma.len(), d, "gamma length mismatch");
+    assert_eq!(beta.len(), d, "beta length mismatch");
+    let mut out = Tensor::zeros(&[n, d]);
+    for i in 0..n {
+        let row = x.row(i);
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row
+            .iter()
+            .map(|&v| {
+                let c = v as f64 - mean;
+                c * c
+            })
+            .sum::<f64>()
+            / d as f64;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (c, o) in out.row_mut(i).iter_mut().enumerate() {
+            *o = ((row[c] as f64 - mean) * inv * gamma[c] as f64 + beta[c] as f64) as f32;
+        }
+    }
+    out
+}
+
+/// GELU (tanh approximation), evaluated in f64 per element.
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f64 = 0.797_884_560_802_865_4;
+    let x = x as f64;
+    (0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())) as f32
+}
+
+/// Add a bias vector to every row.
+fn add_row_bias(x: &Tensor, bias: &[f32]) -> Tensor {
+    assert_eq!(x.shape()[1], bias.len(), "bias length mismatch");
+    let n = x.shape()[0];
+    let mut out = x.clone();
+    for i in 0..n {
+        for (o, &b) in out.row_mut(i).iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+    out
+}
+
+/// Copy columns `[start, start + width)` of a `[n, m]` tensor into a
+/// fresh `[n, width]` tensor (per-head slicing).
+fn col_slice(x: &Tensor, start: usize, width: usize) -> Tensor {
+    let n = x.shape()[0];
+    let mut out = Tensor::zeros(&[n, width]);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&x.row(i)[start..start + width]);
+    }
+    out
+}
+
+/// One pre-LN transformer block with TaylorShift attention.
+pub struct Block {
+    heads: usize,
+    head_dim: usize,
+    tau: f32,
+    ln1_gamma: Vec<f32>,
+    ln1_beta: Vec<f32>,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ln2_gamma: Vec<f32>,
+    ln2_beta: Vec<f32>,
+    w1: Tensor,
+    b1: Vec<f32>,
+    w2: Tensor,
+    b2: Vec<f32>,
+}
+
+impl Block {
+    /// Deterministic seeded init: projection weights N(0, 1/fan_in),
+    /// LayerNorm at identity, small random biases.
+    pub fn new(heads: usize, head_dim: usize, d_ff: usize, tau: f32, seed: u64) -> Self {
+        assert!(heads > 0 && head_dim > 0 && d_ff > 0, "block dims must be positive");
+        let dm = heads * head_dim;
+        let proj_scale = 1.0 / (dm as f32).sqrt();
+        let ff_scale = 1.0 / (d_ff as f32).sqrt();
+        Self {
+            heads,
+            head_dim,
+            tau,
+            ln1_gamma: vec![1.0; dm],
+            ln1_beta: vec![0.0; dm],
+            wq: Tensor::randn(&[dm, dm], seed.wrapping_add(1)).scale(proj_scale),
+            wk: Tensor::randn(&[dm, dm], seed.wrapping_add(2)).scale(proj_scale),
+            wv: Tensor::randn(&[dm, dm], seed.wrapping_add(3)).scale(proj_scale),
+            wo: Tensor::randn(&[dm, dm], seed.wrapping_add(4)).scale(proj_scale),
+            ln2_gamma: vec![1.0; dm],
+            ln2_beta: vec![0.0; dm],
+            w1: Tensor::randn(&[dm, d_ff], seed.wrapping_add(5)).scale(proj_scale),
+            b1: Tensor::randn(&[1, d_ff], seed.wrapping_add(6))
+                .scale(0.02)
+                .into_data(),
+            w2: Tensor::randn(&[d_ff, dm], seed.wrapping_add(7)).scale(ff_scale),
+            b2: Tensor::randn(&[1, dm], seed.wrapping_add(8))
+                .scale(0.02)
+                .into_data(),
+        }
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau
+    }
+
+    /// MLP sub-layer: `gelu(x·W1 + b1)·W2 + b2`, row-wise.
+    fn mlp(&self, x: &Tensor) -> Tensor {
+        let h = add_row_bias(&x.matmul(&self.w1), &self.b1).map(gelu);
+        add_row_bias(&h.matmul(&self.w2), &self.b2)
+    }
+
+    /// Batch forward over an `[n, d_model]` prefix with causal
+    /// attention. `promote_at` is forwarded to [`causal_taylor`] per
+    /// head, mirroring this layer's decode-state promotion point.
+    pub fn forward_batch(&self, x: &Tensor, promote_at: Option<usize>) -> Tensor {
+        let dm = self.d_model();
+        assert_eq!(x.rank(), 2, "block input must be [n, d_model]");
+        assert_eq!(x.shape()[1], dm, "block width mismatch");
+        let n = x.shape()[0];
+        let a = layer_norm(x, &self.ln1_gamma, &self.ln1_beta);
+        let q = a.matmul(&self.wq);
+        let k = a.matmul(&self.wk);
+        let v = a.matmul(&self.wv);
+        let mut attn = Tensor::zeros(&[n, dm]);
+        for h in 0..self.heads {
+            let (lo, width) = (h * self.head_dim, self.head_dim);
+            let qh = col_slice(&q, lo, width);
+            let kh = col_slice(&k, lo, width);
+            let vh = col_slice(&v, lo, width);
+            let yh = causal_taylor(&qh, &kh, &vh, self.tau, promote_at);
+            for i in 0..n {
+                attn.row_mut(i)[lo..lo + width].copy_from_slice(yh.row(i));
+            }
+        }
+        let res = x.add(&attn.matmul(&self.wo));
+        let m = self.mlp(&layer_norm(&res, &self.ln2_gamma, &self.ln2_beta));
+        res.add(&m)
+    }
+
+    /// One streaming token through this block: project the `[1,
+    /// d_model]` row, feed the per-head q/k/v to this layer's resident
+    /// `DecodeSession` (which may promote at `crossover`), and finish
+    /// the block on the attention output. Returns the block output and
+    /// the session's step record.
+    pub fn stream_step(
+        &self,
+        x: &Tensor,
+        state: &mut DecodeSession,
+        crossover: Option<f64>,
+    ) -> (Tensor, StepResult) {
+        let dm = self.d_model();
+        assert_eq!(x.shape(), &[1, dm], "stream input must be [1, d_model]");
+        let a = layer_norm(x, &self.ln1_gamma, &self.ln1_beta);
+        let q = a.matmul(&self.wq).reshape(&[self.heads, self.head_dim]);
+        let k = a.matmul(&self.wk).reshape(&[self.heads, self.head_dim]);
+        let v = a.matmul(&self.wv).reshape(&[self.heads, self.head_dim]);
+        let r = state.step(&q, &k, &v, crossover);
+        let attn = Tensor::new(&[1, dm], r.output.clone());
+        let res = x.add(&attn.matmul(&self.wo));
+        let m = self.mlp(&layer_norm(&res, &self.ln2_gamma, &self.ln2_beta));
+        (res.add(&m), r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let x = Tensor::randn(&[4, 16], 3);
+        let y = layer_norm(&x, &vec![1.0; 16], &vec![0.0; 16]);
+        for i in 0..4 {
+            let row = y.row(i);
+            let mean: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / 16.0;
+            let var: f64 = row
+                .iter()
+                .map(|&v| {
+                    let c = v as f64 - mean;
+                    c * c
+                })
+                .sum::<f64>()
+                / 16.0;
+            assert!(mean.abs() < 1e-5, "row {i} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {i} var {var}");
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4, "strongly negative input gates to ~0");
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4, "strongly positive input passes");
+    }
+
+    /// Block-level version of the whole-model parity claim: a single
+    /// block streamed token-by-token is bit-identical to its batch
+    /// forward, across a mid-stream promotion.
+    #[test]
+    fn stream_matches_batch_bitwise() {
+        let (heads, head_dim, d_ff, tau) = (2usize, 4usize, 16usize, 1.1f32);
+        let block = Block::new(heads, head_dim, d_ff, tau, 99);
+        let n = 12usize;
+        let promote = 5usize;
+        let x = Tensor::randn(&[n, block.d_model()], 1234);
+        let batch = block.forward_batch(&x, Some(promote));
+        let mut session = DecodeSession::new(heads, head_dim, tau, false);
+        for t in 0..n {
+            let token = Tensor::new(&[1, block.d_model()], x.row(t).to_vec());
+            let (y, r) = block.stream_step(&token, &mut session, Some(promote as f64));
+            assert_eq!(r.promoted, t + 1 == promote, "step {}", t + 1);
+            assert_eq!(y.row(0), batch.row(t), "row {t} must be bit-exact");
+        }
+        assert_eq!(session.promoted_at(), Some(promote));
+    }
+}

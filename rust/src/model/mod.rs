@@ -1,0 +1,152 @@
+//! Whole-model streaming decode: a transformer of TaylorShift blocks
+//! that serves one token at a time from per-layer resident state.
+//!
+//! PR 6's `decode/` subsystem streams a *single* attention module; the
+//! paper's efficiency story only pays off when the entire model
+//! streams. Following the linear-attention-as-RNN decomposition
+//! (Katharopoulos et al., "Transformers are RNNs"), each [`Block`]
+//! (pre-LN → TaylorShift multi-head attention → residual → MLP →
+//! residual) owns its own decode state and the [`StreamingModel`]
+//! threads one token through all L blocks per step.
+//!
+//! ## Per-layer crossover math
+//!
+//! Every layer sees every token, so all layer states share one prefix
+//! length N — but each layer holds an independent
+//! [`crate::decode::DecodeSession`] with its own branch and promotion
+//! threshold:
+//!
+//! * below the selector's crossover N₀(d) a layer serves from a
+//!   `KvCache` — O(N·d) per token per head, O(N·d) state;
+//! * at N ≥ N₀(d) the layer is **promoted**: its cached (normalized
+//!   key, value) pairs are replayed once (O(N·d³)) into the Taylor
+//!   moments of a `RecurrentState`, after which each token costs
+//!   O(d³) per head — flat in N.
+//!
+//! With a shared head dimension the analytical threshold is the same
+//! for every layer, and layers promote on the same step; forced
+//! variants, per-layer thresholds (tests/benches), or future per-layer
+//! head dims make them cross independently — the state stack supports
+//! both.
+//!
+//! ## Promotion invariants
+//!
+//! Both branches compute the same attention function, so the output
+//! stream is continuous across any layer's switch. The batch mirror
+//! [`crate::attention::causal::causal_taylor`] replicates the state
+//! machines' arithmetic exactly, which is what lets the parity tests
+//! demand streaming ≡ batch at every prefix length, including streams
+//! where only a strict subset of layers promotes mid-stream. A
+//! promoted layer records the prefix length at which it switched
+//! (`promoted_at`), and a promotion replays exactly the tokens cached
+//! *before* the promoting token — the token that crosses the threshold
+//! is absorbed raw into the fresh moments.
+//!
+//! The serving integration lives in [`SessionStore`] (LRU over
+//! [`ModelSession`]s, byte accounting summed across layers) and
+//! `coordinator/engine.rs` (`submit_stream` / `decode_step` /
+//! `close_stream`).
+
+pub mod block;
+pub mod store;
+pub mod streaming;
+
+pub use block::{layer_norm, Block};
+pub use store::{SessionStore, SessionSummary, StepMiss, StepOutcome};
+pub use streaming::{LayerStep, ModelSession, ModelStepResult, StreamingModel};
+
+use crate::decode::DecodeConfig;
+
+/// Architecture of the streaming transformer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Transformer blocks the token passes through.
+    pub n_layers: usize,
+    /// Attention heads per block.
+    pub heads: usize,
+    /// Per-head dimension (the selector's `d`).
+    pub head_dim: usize,
+    /// Hidden width of each block's MLP.
+    pub d_ff: usize,
+    /// Per-layer attention temperature, length `n_layers`.
+    pub taus: Vec<f32>,
+    /// Weight-init seed (deterministic model).
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    /// Model width: `heads · head_dim`.
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Derive the architecture from the engine's decode config. An
+    /// empty `layer_taus` broadcasts the scalar `tau` to every layer.
+    pub fn from_decode(decode: &DecodeConfig, head_dim: usize) -> Self {
+        let taus = if decode.layer_taus.is_empty() {
+            vec![decode.tau; decode.n_layers]
+        } else {
+            assert_eq!(
+                decode.layer_taus.len(),
+                decode.n_layers,
+                "layer_taus length must equal n_layers"
+            );
+            decode.layer_taus.clone()
+        };
+        Self {
+            n_layers: decode.n_layers,
+            heads: decode.heads,
+            head_dim,
+            d_ff: decode.d_ff,
+            taus,
+            seed: decode.model_seed,
+        }
+    }
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig::from_decode(&DecodeConfig::default(), 16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_decode_broadcasts_tau() {
+        let decode = DecodeConfig {
+            heads: 2,
+            tau: 1.25,
+            n_layers: 3,
+            ..DecodeConfig::default()
+        };
+        let cfg = ModelConfig::from_decode(&decode, 8);
+        assert_eq!(cfg.d_model(), 16);
+        assert_eq!(cfg.taus, vec![1.25; 3]);
+        assert_eq!(cfg.seed, decode.model_seed);
+    }
+
+    #[test]
+    fn from_decode_takes_per_layer_taus() {
+        let decode = DecodeConfig {
+            n_layers: 2,
+            layer_taus: vec![0.5, 2.0],
+            ..DecodeConfig::default()
+        };
+        let cfg = ModelConfig::from_decode(&decode, 4);
+        assert_eq!(cfg.taus, vec![0.5, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "layer_taus length must equal n_layers")]
+    fn mismatched_layer_taus_panic() {
+        let decode = DecodeConfig {
+            n_layers: 3,
+            layer_taus: vec![1.0],
+            ..DecodeConfig::default()
+        };
+        let _ = ModelConfig::from_decode(&decode, 4);
+    }
+}

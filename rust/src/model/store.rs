@@ -1,0 +1,431 @@
+//! LRU-evicting, byte-budgeted store of resident [`ModelSession`]s.
+//!
+//! Byte accounting sums every layer's decode state (KV caches grow
+//! with the prefix; recurrent moments are flat), so a long-prefix
+//! unpromoted stream weighs L times its single-layer cost. When the
+//! budget or the session cap is exceeded, least-recently-used sessions
+//! are evicted — and remembered, so a client stepping an evicted
+//! stream gets a typed [`StepMiss::Evicted`] ("re-prefill required")
+//! instead of a panic or a silently fresh state.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::attention::selector::Selector;
+use crate::attention::AttentionVariant;
+use crate::decode::DecodeConfig;
+use crate::tensor::Tensor;
+
+use super::streaming::{ModelSession, ModelStepResult, StreamingModel};
+use super::ModelConfig;
+
+/// Why a store-level step could not run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepMiss {
+    /// The id was never opened (or was closed normally).
+    Unknown,
+    /// The session was LRU-evicted under memory pressure; the client
+    /// must re-prefill before streaming again.
+    Evicted,
+}
+
+/// Outcome of a store-level decode step.
+pub struct StepOutcome {
+    pub result: ModelStepResult,
+    /// Sessions LRU-evicted to make room during this operation.
+    pub evicted: Vec<u64>,
+}
+
+/// Closing summary for a finished session.
+#[derive(Clone, Debug)]
+pub struct SessionSummary {
+    pub tokens: usize,
+    /// Branch serving each layer at close time.
+    pub branches: Vec<AttentionVariant>,
+    pub bytes: u64,
+    /// Per-layer promotion points (`None` = layer stayed KV).
+    pub promoted_at: Vec<Option<usize>>,
+}
+
+struct Resident {
+    session: ModelSession,
+    last_used: u64,
+    bytes: u64,
+}
+
+/// Keeps whole-model streaming sessions resident under a byte budget.
+pub struct SessionStore {
+    cfg: DecodeConfig,
+    model: StreamingModel,
+    selector: Selector,
+    forced: Option<AttentionVariant>,
+    sessions: HashMap<u64, Resident>,
+    evicted_ids: HashSet<u64>,
+    evicted_order: VecDeque<u64>,
+    clock: u64,
+    resident_bytes: u64,
+}
+
+impl SessionStore {
+    /// Bound on remembered evictions: old entries age out FIFO so the
+    /// tombstone set cannot grow without limit.
+    const EVICTED_MEMORY: usize = 1024;
+
+    /// `forced` mirrors the engine's variant override: `Direct` pins
+    /// every layer to the KV path (never promote), `Efficient` starts
+    /// them all recurrent. `Softmax` has no streaming form and falls
+    /// back to the selector policy.
+    pub fn new(
+        cfg: DecodeConfig,
+        head_dim: usize,
+        selector: Selector,
+        forced: Option<AttentionVariant>,
+    ) -> Self {
+        let model = StreamingModel::new(ModelConfig::from_decode(&cfg, head_dim));
+        Self {
+            cfg,
+            model,
+            selector,
+            forced,
+            sessions: HashMap::new(),
+            evicted_ids: HashSet::new(),
+            evicted_order: VecDeque::new(),
+            clock: 0,
+            resident_bytes: 0,
+        }
+    }
+
+    /// The deterministic model every session streams through.
+    pub fn model(&self) -> &StreamingModel {
+        &self.model
+    }
+
+    pub fn config(&self) -> &DecodeConfig {
+        &self.cfg
+    }
+
+    /// Resident session count.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Total bytes held by resident session state, all layers summed.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// True iff `id` was LRU-evicted (and not reopened since).
+    pub fn was_evicted(&self, id: u64) -> bool {
+        self.evicted_ids.contains(&id)
+    }
+
+    /// Open (or reset) a session. Returns ids evicted to fit it.
+    pub fn open(&mut self, id: u64) -> Vec<u64> {
+        self.forget_eviction(id);
+        if let Some(old) = self.sessions.remove(&id) {
+            self.resident_bytes -= old.bytes;
+        }
+        let session = ModelSession::new(&self.model, &self.selector, self.forced);
+        let bytes = session.state_bytes();
+        self.clock += 1;
+        self.resident_bytes += bytes;
+        self.sessions.insert(
+            id,
+            Resident {
+                session,
+                last_used: self.clock,
+                bytes,
+            },
+        );
+        self.enforce_budget(Some(id))
+    }
+
+    /// One whole-model decode step for session `id`.
+    pub fn step(&mut self, id: u64, token: &Tensor) -> Result<StepOutcome, StepMiss> {
+        self.clock += 1;
+        let clock = self.clock;
+        let model = &self.model;
+        let Some(entry) = self.sessions.get_mut(&id) else {
+            return Err(if self.evicted_ids.contains(&id) {
+                StepMiss::Evicted
+            } else {
+                StepMiss::Unknown
+            });
+        };
+        let before = entry.bytes;
+        let result = model.step(&mut entry.session, token);
+        let after = entry.session.state_bytes();
+        entry.bytes = after;
+        entry.last_used = clock;
+        // `before` is included in the resident total, so this never underflows.
+        self.resident_bytes = self.resident_bytes - before + after;
+        let evicted = self.enforce_budget(Some(id));
+        Ok(StepOutcome { result, evicted })
+    }
+
+    /// Drop a session normally, returning its closing summary. A
+    /// closed session is *not* recorded as evicted — stepping it again
+    /// yields [`StepMiss::Unknown`].
+    pub fn close(&mut self, id: u64) -> Option<SessionSummary> {
+        let entry = self.sessions.remove(&id)?;
+        self.resident_bytes -= entry.bytes;
+        Some(SessionSummary {
+            tokens: entry.session.len(),
+            branches: entry.session.branches(),
+            bytes: entry.bytes,
+            promoted_at: entry.session.promoted_at(),
+        })
+    }
+
+    /// Per-layer branch occupancy across resident sessions: for each
+    /// layer, how many sessions it serves on (KV, recurrent).
+    pub fn layer_occupancy(&self) -> (Vec<u64>, Vec<u64>) {
+        let n = self.model.config().n_layers;
+        let mut kv = vec![0u64; n];
+        let mut recurrent = vec![0u64; n];
+        for entry in self.sessions.values() {
+            for (l, b) in entry.session.branches().iter().enumerate() {
+                match b {
+                    AttentionVariant::Efficient => recurrent[l] += 1,
+                    _ => kv[l] += 1,
+                }
+            }
+        }
+        (kv, recurrent)
+    }
+
+    fn forget_eviction(&mut self, id: u64) {
+        if self.evicted_ids.remove(&id) {
+            self.evicted_order.retain(|&e| e != id);
+        }
+    }
+
+    fn record_eviction(&mut self, id: u64) {
+        if self.evicted_ids.insert(id) {
+            self.evicted_order.push_back(id);
+            while self.evicted_order.len() > Self::EVICTED_MEMORY {
+                if let Some(old) = self.evicted_order.pop_front() {
+                    self.evicted_ids.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Evict LRU sessions until both the byte budget and the session
+    /// cap hold. The session named by `protect` (the one being
+    /// operated on) is never evicted.
+    fn enforce_budget(&mut self, protect: Option<u64>) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        loop {
+            let over_bytes = self.resident_bytes > self.cfg.max_session_bytes;
+            let over_count = self.sessions.len() > self.cfg.max_sessions;
+            if !over_bytes && !over_count {
+                break;
+            }
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(id, _)| Some(**id) != protect)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(id, _)| *id);
+            let Some(victim) = victim else {
+                break; // only the protected session remains
+            };
+            let gone = self.sessions.remove(&victim).expect("victim resident");
+            self.resident_bytes -= gone.bytes;
+            self.record_eviction(victim);
+            evicted.push(victim);
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> DecodeConfig {
+        DecodeConfig {
+            heads: 1,
+            n_layers: 1,
+            d_ff: 16,
+            ..DecodeConfig::default()
+        }
+    }
+
+    fn token(d_model: usize, seed: u64) -> Tensor {
+        Tensor::randn(&[1, d_model], seed)
+    }
+
+    #[test]
+    fn store_evicts_lru_under_byte_budget() {
+        let d = 8usize;
+        let cfg = DecodeConfig {
+            // Room for roughly two single-layer KV sessions of ~12 tokens.
+            max_session_bytes: 2 * 12 * 2 * d as u64 * 4,
+            max_sessions: 16,
+            ..small_cfg()
+        };
+        let mut store =
+            SessionStore::new(cfg, d, Selector::analytical(), Some(AttentionVariant::Direct));
+        let t = token(d, 7);
+        store.open(1);
+        store.open(2);
+        store.open(3);
+        let mut all_evicted = Vec::new();
+        for _ in 0..12 {
+            for id in [1u64, 2, 3] {
+                if store.contains(id) {
+                    let out = store.step(id, &t).unwrap();
+                    all_evicted.extend(out.evicted);
+                }
+            }
+        }
+        assert!(!all_evicted.is_empty(), "budget never triggered eviction");
+        assert!(store.resident_bytes() <= store.config().max_session_bytes);
+        // Evicted sessions miss with the typed re-prefill error.
+        let gone = all_evicted[0];
+        assert_eq!(store.step(gone, &t).unwrap_err(), StepMiss::Evicted);
+    }
+
+    #[test]
+    fn store_caps_session_count() {
+        let cfg = DecodeConfig {
+            max_sessions: 2,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        assert!(store.open(1).is_empty());
+        assert!(store.open(2).is_empty());
+        let evicted = store.open(3);
+        assert_eq!(evicted, vec![1], "oldest session evicted");
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn lru_order_follows_use_not_creation() {
+        let cfg = DecodeConfig {
+            max_sessions: 2,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        let t = token(4, 9);
+        store.open(1);
+        store.open(2);
+        store.step(1, &t).unwrap(); // 1 is now most recent
+        let evicted = store.open(3);
+        assert_eq!(evicted, vec![2]);
+        assert!(store.contains(1) && store.contains(3));
+    }
+
+    #[test]
+    fn forced_direct_never_promotes() {
+        let mut store = SessionStore::new(
+            small_cfg(),
+            2, // crossover N0(2) is tiny — would promote immediately
+            Selector::analytical(),
+            Some(AttentionVariant::Direct),
+        );
+        let t = token(2, 3);
+        store.open(5);
+        for _ in 0..32 {
+            let out = store.step(5, &t).unwrap();
+            for ls in &out.result.layers {
+                assert_eq!(ls.branch, AttentionVariant::Direct);
+                assert!(!ls.promoted);
+            }
+        }
+    }
+
+    #[test]
+    fn forced_efficient_starts_recurrent() {
+        let mut store = SessionStore::new(
+            small_cfg(),
+            16,
+            Selector::analytical(),
+            Some(AttentionVariant::Efficient),
+        );
+        let t = token(16, 4);
+        store.open(5);
+        let out = store.step(5, &t).unwrap();
+        for ls in &out.result.layers {
+            assert_eq!(ls.branch, AttentionVariant::Efficient);
+            assert!(!ls.promoted, "no promotion event when born recurrent");
+        }
+    }
+
+    #[test]
+    fn close_reports_summary_and_frees_bytes() {
+        let cfg = DecodeConfig {
+            heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            ..DecodeConfig::default()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        let t = token(8, 11);
+        store.open(9);
+        for _ in 0..3 {
+            store.step(9, &t).unwrap();
+        }
+        let summary = store.close(9).unwrap();
+        assert_eq!(summary.tokens, 3);
+        assert_eq!(summary.branches.len(), 2);
+        assert_eq!(summary.promoted_at.len(), 2);
+        assert_eq!(store.resident_bytes(), 0);
+        assert!(store.close(9).is_none());
+        // Closed ≠ evicted: the next step is Unknown, not Evicted.
+        assert_eq!(store.step(9, &t).unwrap_err(), StepMiss::Unknown);
+    }
+
+    #[test]
+    fn unknown_session_misses_as_unknown() {
+        let mut store = SessionStore::new(small_cfg(), 4, Selector::analytical(), None);
+        assert_eq!(store.step(99, &token(4, 1)).unwrap_err(), StepMiss::Unknown);
+    }
+
+    #[test]
+    fn reopen_clears_eviction_tombstone() {
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        store.open(1);
+        let evicted = store.open(2);
+        assert_eq!(evicted, vec![1]);
+        assert!(store.was_evicted(1));
+        let t = token(4, 2);
+        assert_eq!(store.step(1, &t).unwrap_err(), StepMiss::Evicted);
+        store.open(1); // re-prefill path: reopen after eviction
+        assert!(!store.was_evicted(1));
+        assert!(store.step(1, &t).is_ok());
+    }
+
+    #[test]
+    fn layer_occupancy_counts_branches() {
+        let cfg = DecodeConfig {
+            n_layers: 2,
+            d_ff: 16,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(
+            cfg,
+            4,
+            Selector::analytical(),
+            Some(AttentionVariant::Direct),
+        );
+        store.open(1);
+        store.open(2);
+        let (kv, recurrent) = store.layer_occupancy();
+        assert_eq!(kv, vec![2, 2]);
+        assert_eq!(recurrent, vec![0, 0]);
+    }
+}

@@ -1,0 +1,280 @@
+//! [`StreamingModel`] (the weights) and [`ModelSession`] (one stream's
+//! per-layer decode state stack).
+//!
+//! The model is a stack of [`Block`]s with deterministic seeded
+//! weights; `forward_batch` is the whole-sequence reference and `step`
+//! threads one `[1, d_model]` token through every block against the
+//! session's per-layer [`DecodeSession`]s. Layer `l`'s decode state may
+//! sit on either branch independently of the others — the session
+//! carries one threshold per layer.
+
+use crate::attention::selector::Selector;
+use crate::attention::AttentionVariant;
+use crate::decode::DecodeSession;
+use crate::tensor::Tensor;
+
+use super::block::Block;
+use super::ModelConfig;
+
+/// What one layer did during a model step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerStep {
+    /// Branch that served this layer's attention.
+    pub branch: AttentionVariant,
+    /// True iff this step triggered this layer's KV→recurrent switch.
+    pub promoted: bool,
+}
+
+/// Result of threading one token through all layers.
+#[derive(Clone, Debug)]
+pub struct ModelStepResult {
+    /// Final-block output row, length `d_model`.
+    pub output: Vec<f32>,
+    /// Per-layer branch/promotion records, length `n_layers`.
+    pub layers: Vec<LayerStep>,
+    /// Prefix length after this step.
+    pub len: usize,
+}
+
+/// One stream's state: a per-layer stack of decode sessions plus the
+/// promotion threshold each layer watches.
+pub struct ModelSession {
+    layers: Vec<DecodeSession>,
+    thresholds: Vec<Option<f64>>,
+    len: usize,
+}
+
+impl ModelSession {
+    /// Open a session under the engine's policy: `forced` pins every
+    /// layer to one branch (`Direct` → KV forever, `Efficient` → born
+    /// recurrent); otherwise each layer starts on the branch the
+    /// selector picks for a length-1 prefix and promotes at the
+    /// selector's crossover for the model's head dimension.
+    pub fn new(model: &StreamingModel, selector: &Selector, forced: Option<AttentionVariant>) -> Self {
+        let head_dim = model.config().head_dim;
+        let start_recurrent = match forced {
+            Some(AttentionVariant::Efficient) => true,
+            Some(AttentionVariant::Direct) => false,
+            _ => selector.select(1, head_dim) == AttentionVariant::Efficient,
+        };
+        let threshold = match forced {
+            Some(AttentionVariant::Direct) | Some(AttentionVariant::Efficient) => None,
+            _ => Some(selector.crossover(head_dim)),
+        };
+        let n = model.config().n_layers;
+        Self::with_thresholds(model, &vec![start_recurrent; n], vec![threshold; n])
+    }
+
+    /// Open a session with explicit per-layer starting branches and
+    /// promotion thresholds (tests/benches force layers to cross at
+    /// chosen steps).
+    pub fn with_thresholds(
+        model: &StreamingModel,
+        start_recurrent: &[bool],
+        thresholds: Vec<Option<f64>>,
+    ) -> Self {
+        let cfg = model.config();
+        assert_eq!(start_recurrent.len(), cfg.n_layers, "start_recurrent length mismatch");
+        assert_eq!(thresholds.len(), cfg.n_layers, "thresholds length mismatch");
+        let layers = (0..cfg.n_layers)
+            .map(|l| DecodeSession::new(cfg.heads, cfg.head_dim, cfg.taus[l], start_recurrent[l]))
+            .collect();
+        Self {
+            layers,
+            thresholds,
+            len: 0,
+        }
+    }
+
+    /// Tokens streamed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Resident bytes summed across every layer's state.
+    pub fn state_bytes(&self) -> u64 {
+        self.layers.iter().map(DecodeSession::state_bytes).sum()
+    }
+
+    /// Branch currently serving each layer.
+    pub fn branches(&self) -> Vec<AttentionVariant> {
+        self.layers.iter().map(DecodeSession::branch).collect()
+    }
+
+    /// Per-layer promotion points (prefix length including the
+    /// promoting token), `None` for layers still on KV.
+    pub fn promoted_at(&self) -> Vec<Option<usize>> {
+        self.layers.iter().map(DecodeSession::promoted_at).collect()
+    }
+}
+
+/// A deterministic stack of TaylorShift transformer blocks.
+pub struct StreamingModel {
+    cfg: ModelConfig,
+    blocks: Vec<Block>,
+}
+
+impl StreamingModel {
+    pub fn new(cfg: ModelConfig) -> Self {
+        assert!(cfg.n_layers > 0, "model needs at least one layer");
+        assert_eq!(cfg.taus.len(), cfg.n_layers, "taus length must equal n_layers");
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                Block::new(
+                    cfg.heads,
+                    cfg.head_dim,
+                    cfg.d_ff,
+                    cfg.taus[l],
+                    cfg.seed.wrapping_add(1000 * l as u64),
+                )
+            })
+            .collect();
+        Self { cfg, blocks }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.cfg.d_model()
+    }
+
+    /// Whole-sequence reference forward pass. `promotions[l]` is the
+    /// prefix length at which layer `l`'s decode state promotes
+    /// (`None` = stays KV), forwarded to each block's causal mirror so
+    /// this matches a stream whose layers cross at those exact steps.
+    pub fn forward_batch(&self, x: &Tensor, promotions: &[Option<usize>]) -> Tensor {
+        assert_eq!(promotions.len(), self.blocks.len(), "one promotion point per layer");
+        let mut h = x.clone();
+        for (block, &p) in self.blocks.iter().zip(promotions) {
+            h = block.forward_batch(&h, p);
+        }
+        h
+    }
+
+    /// Thread one `[1, d_model]` token through all layers against the
+    /// session's state stack.
+    pub fn step(&self, session: &mut ModelSession, token: &Tensor) -> ModelStepResult {
+        assert_eq!(
+            token.shape(),
+            &[1, self.d_model()],
+            "token must be [1, d_model={}]",
+            self.d_model()
+        );
+        assert_eq!(
+            session.layers.len(),
+            self.blocks.len(),
+            "session layer stack does not match this model"
+        );
+        let mut h = token.clone();
+        let mut layers = Vec::with_capacity(self.blocks.len());
+        for (l, block) in self.blocks.iter().enumerate() {
+            let (out, r) = block.stream_step(&h, &mut session.layers[l], session.thresholds[l]);
+            layers.push(LayerStep {
+                branch: r.branch,
+                promoted: r.promoted,
+            });
+            h = out;
+        }
+        session.len += 1;
+        ModelStepResult {
+            output: h.into_data(),
+            layers,
+            len: session.len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::DecodeConfig;
+
+    fn small_model(n_layers: usize) -> StreamingModel {
+        let decode = DecodeConfig {
+            heads: 2,
+            n_layers,
+            d_ff: 24,
+            ..DecodeConfig::default()
+        };
+        StreamingModel::new(ModelConfig::from_decode(&decode, 4))
+    }
+
+    /// Layers promoting at different steps must still match the batch
+    /// reference bit-for-bit at every prefix.
+    #[test]
+    fn streaming_matches_batch_with_mixed_promotions() {
+        let model = small_model(3);
+        let n = 14usize;
+        // Layer 0 promotes at 4, layer 2 at 9, layer 1 never.
+        let promotions = [Some(4), None, Some(9)];
+        let x = Tensor::randn(&[n, model.d_model()], 555);
+        let batch = model.forward_batch(&x, &promotions);
+        let thresholds = promotions.iter().map(|p| p.map(|v| v as f64)).collect();
+        let mut session = ModelSession::with_thresholds(&model, &[false; 3], thresholds);
+        for t in 0..n {
+            let token = Tensor::new(&[1, model.d_model()], x.row(t).to_vec());
+            let r = model.step(&mut session, &token);
+            assert_eq!(r.len, t + 1);
+            assert_eq!(r.output.as_slice(), batch.row(t), "prefix {} diverged", t + 1);
+            for (l, ls) in r.layers.iter().enumerate() {
+                assert_eq!(
+                    ls.promoted,
+                    promotions[l] == Some(t + 1),
+                    "layer {l} promotion flag at step {}",
+                    t + 1
+                );
+            }
+        }
+        assert_eq!(session.promoted_at(), promotions.to_vec());
+        assert_eq!(
+            session.branches(),
+            vec![
+                AttentionVariant::Efficient,
+                AttentionVariant::Direct,
+                AttentionVariant::Efficient
+            ]
+        );
+    }
+
+    #[test]
+    fn state_bytes_sum_layers() {
+        let model = small_model(2);
+        let mut session = ModelSession::with_thresholds(&model, &[false, false], vec![None, None]);
+        let fresh = session.state_bytes();
+        assert_eq!(
+            fresh,
+            session.layers.iter().map(DecodeSession::state_bytes).sum::<u64>()
+        );
+        let token = Tensor::randn(&[1, model.d_model()], 8);
+        model.step(&mut session, &token);
+        assert!(session.state_bytes() > fresh, "KV layers grow with tokens");
+        assert_eq!(session.len(), 1);
+    }
+
+    #[test]
+    fn selector_policy_broadcasts_to_layers() {
+        let model = small_model(2);
+        // Forced Direct: all layers KV, no thresholds.
+        let s = ModelSession::new(&model, &Selector::analytical(), Some(AttentionVariant::Direct));
+        assert_eq!(s.branches(), vec![AttentionVariant::Direct; 2]);
+        assert_eq!(s.thresholds, vec![None, None]);
+        // Forced Efficient: born recurrent everywhere.
+        let s = ModelSession::new(&model, &Selector::analytical(), Some(AttentionVariant::Efficient));
+        assert_eq!(s.branches(), vec![AttentionVariant::Efficient; 2]);
+        // Selector policy: thresholds armed with the d-specific crossover.
+        let sel = Selector::analytical();
+        let s = ModelSession::new(&model, &sel, None);
+        let want = sel.crossover(model.config().head_dim);
+        assert_eq!(s.thresholds, vec![Some(want); 2]);
+    }
+}

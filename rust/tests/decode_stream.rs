@@ -1,14 +1,17 @@
-//! Property tests for the streaming decode subsystem (`decode/`):
-//! incremental per-token decode must compute exactly the same function
-//! as the batch attention implementations over the full prefix —
-//! including across a mid-stream KV→recurrent promotion — and the
-//! session store must respect its memory budget.
+//! Property tests for the streaming decode subsystem (`decode/` +
+//! `model/`): incremental per-token decode must compute exactly the
+//! same function as the batch implementations over the full prefix —
+//! including across mid-stream KV→recurrent promotions, including the
+//! whole multi-layer model — and the session store must respect its
+//! memory budget.
 
 use taylorshift::attention::selector::Selector;
 use taylorshift::attention::{direct, efficient, run_variant, AttentionVariant};
-use taylorshift::decode::{DecodeConfig, DecodeSession, KvCache, RecurrentState, SessionStore};
+use taylorshift::decode::{DecodeConfig, DecodeSession, KvCache, RecurrentState};
+use taylorshift::model::{ModelConfig, ModelSession, SessionStore, StreamingModel};
 use taylorshift::tensor::Tensor;
 use taylorshift::testing::prop::{pair, run, Config, Gen};
+use taylorshift::util::rng::Pcg64;
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
@@ -150,6 +153,8 @@ fn prop_store_respects_budget_and_cap() {
             let d = 8usize;
             let cfg = DecodeConfig {
                 heads: 1,
+                n_layers: 1,
+                d_ff: 16,
                 // Tight: a few KV tokens' worth of state.
                 max_session_bytes: 6 * 2 * d as u64 * 4,
                 max_sessions,
@@ -166,13 +171,10 @@ fn prop_store_respects_budget_and_cap() {
             for s in 0..streams as u64 {
                 store.open(s);
                 for t in 0..steps_each {
-                    let seed = s * 100 + t as u64;
-                    let q = Tensor::randn(&[1, d], seed);
-                    let k = Tensor::randn(&[1, d], seed + 1);
-                    let v = Tensor::randn(&[1, d], seed + 2);
+                    let token = Tensor::randn(&[1, d], s * 100 + t as u64);
                     // The session may itself have been evicted by a
-                    // later open; a miss is a valid outcome here.
-                    let _ = store.step(s, &q, &k, &v);
+                    // later open; a typed miss is a valid outcome here.
+                    let _ = store.step(s, &token);
                     if store.len() > max_sessions {
                         return false;
                     }
@@ -182,6 +184,68 @@ fn prop_store_respects_budget_and_cap() {
                 }
             }
             true
+        },
+    );
+}
+
+/// The acceptance-criteria property: for random (L ≤ 4, N ≤ 512, d,
+/// tau), whole-model streaming matches the batch forward pass within
+/// 1e-5 at every prefix length, with a strict subset of layers forced
+/// to promote mid-stream (the rest stay on the KV branch throughout).
+#[test]
+fn prop_whole_model_streaming_matches_batch_forward() {
+    run(
+        Config::default().cases(8).seed(0xD00D),
+        pair(
+            pair(Gen::usize_range(1, 4), Gen::usize_range(8, 512)),
+            pair(
+                pair(Gen::usize_range(1, 2), Gen::usize_range(2, 8)),
+                Gen::f64_range(0.5, 2.0),
+            ),
+        ),
+        |&((n_layers, n), ((heads, head_dim), tau))| {
+            let seed = (n_layers * 1_000_003 + n * 997 + heads * 131 + head_dim) as u64;
+            let mut rng = Pcg64::new(seed);
+            // A strict subset of layers promotes: `promoting` layers
+            // (possibly zero, never all) cross at random points in
+            // [2, n]; the rest never leave the KV branch.
+            let promoting = rng.range_usize(0, n_layers);
+            let promotions: Vec<Option<usize>> = (0..n_layers)
+                .map(|l| (l < promoting).then(|| rng.range_usize(2, n + 1)))
+                .collect();
+            let cfg = ModelConfig {
+                n_layers,
+                heads,
+                head_dim,
+                d_ff: 2 * heads * head_dim,
+                taus: (0..n_layers)
+                    .map(|l| (tau * (1.0 + 0.07 * l as f64)) as f32)
+                    .collect(),
+                seed: seed ^ 0x9E37_79B9,
+            };
+            let model = StreamingModel::new(cfg);
+            let dm = model.d_model();
+            let x = Tensor::randn(&[n, dm], seed + 7);
+            let batch = model.forward_batch(&x, &promotions);
+            let thresholds = promotions.iter().map(|p| p.map(|v| v as f64)).collect();
+            let mut session =
+                ModelSession::with_thresholds(&model, &vec![false; n_layers], thresholds);
+            for t in 0..n {
+                let token = Tensor::new(&[1, dm], x.row(t).to_vec());
+                let r = model.step(&mut session, &token);
+                if r.len != t + 1 {
+                    return false;
+                }
+                if max_abs_diff(&r.output, batch.row(t)) >= 1e-5 {
+                    return false;
+                }
+                for (l, ls) in r.layers.iter().enumerate() {
+                    if ls.promoted != (promotions[l] == Some(t + 1)) {
+                        return false;
+                    }
+                }
+            }
+            session.promoted_at() == promotions
         },
     );
 }

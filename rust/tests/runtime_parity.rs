@@ -25,12 +25,14 @@ fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
     )
 }
 
-// TRACKING: the vendored `xla` crate is an offline stub whose
+// The vendored `xla` crate is an offline stub whose
 // `PjRtClient::compile` is gated off (no XLA runtime in this tree), so
-// emitter compilation cannot execute. Re-enable both emitter tests when
-// building against the real xla-rs bindings.
+// emitter *compilation* cannot execute by default. The real-runtime
+// variants are behind the `xla-runtime` cargo feature
+// (`cargo test --features xla-runtime` against real xla-rs bindings);
+// the stub-backend tests below run unconditionally in CI.
+#[cfg(feature = "xla-runtime")]
 #[test]
-#[ignore = "requires a real xla runtime; the vendored stub cannot compile HLO"]
 fn emitter_matches_rust_reference_all_variants() {
     let rt = Runtime::cpu().unwrap();
     for (variant, evariant) in [
@@ -52,8 +54,8 @@ fn emitter_matches_rust_reference_all_variants() {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
-#[ignore = "requires a real xla runtime; the vendored stub cannot compile HLO"]
 fn emitter_direct_equals_emitter_efficient() {
     let rt = Runtime::cpu().unwrap();
     let (n, d) = (160, 16);
@@ -67,6 +69,32 @@ fn emitter_direct_equals_emitter_efficient() {
         "max diff {}",
         yd.max_abs_diff(&ye)
     );
+}
+
+/// Stub-safe: building the HLO computation exercises the full emitter
+/// graph construction (XlaBuilder works offline) without compiling.
+#[test]
+fn emitter_builds_all_variants_on_stub() {
+    for evariant in [
+        EmitVariant::Softmax,
+        EmitVariant::TaylorDirect,
+        EmitVariant::TaylorEfficient,
+    ] {
+        for (n, d) in [(64usize, 8usize), (128, 16)] {
+            emitter::build_attention(evariant, n, d, 1.0)
+                .unwrap_or_else(|e| panic!("{evariant:?} n={n} d={d}: {e}"));
+        }
+    }
+}
+
+/// On the stub backend, compilation must fail with an error (never
+/// panic or pretend to succeed) — the behaviour CI exercises daily.
+#[cfg(not(feature = "xla-runtime"))]
+#[test]
+fn stub_backend_gates_compilation() {
+    let rt = Runtime::cpu().unwrap();
+    let err = emitter::compile_attention(&rt, EmitVariant::TaylorDirect, 32, 8, 1.0);
+    assert!(err.is_err(), "stub PjRtClient::compile must be gated off");
 }
 
 #[test]
