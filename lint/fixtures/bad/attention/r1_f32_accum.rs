@@ -1,0 +1,17 @@
+// Fixture: R1 must flag f32 and inferred-f32 accumulators.
+
+pub fn moment_sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += *x;
+    }
+    acc
+}
+
+pub fn inferred_sum(xs: &[f32]) -> f32 {
+    let mut weight_acc = 0.0;
+    for x in xs {
+        weight_acc += *x;
+    }
+    weight_acc
+}

@@ -1,0 +1,13 @@
+// Fixture: R2 must flag divisions by denominator-named values that
+// carry no guard.
+
+pub fn normalize(row: &mut [f32], denom: f32) {
+    for x in row.iter_mut() {
+        *x /= denom;
+    }
+}
+
+pub fn rescale(value: f64, y: &[f64]) -> f64 {
+    let row_sum = y[0];
+    value / row_sum
+}

@@ -1,0 +1,21 @@
+// Fixture: R5 must flag non-snake_case names and names missing a
+// unit suffix, at registration call sites.
+
+pub struct Registry {
+    samples: Vec<(String, f64)>,
+}
+
+impl Registry {
+    pub fn register_counter(&mut self, name: &str, value: f64) {
+        self.samples.push((name.to_string(), value));
+    }
+
+    pub fn register_gauge(&mut self, name: &str, value: f64) {
+        self.samples.push((name.to_string(), value));
+    }
+}
+
+pub fn export(reg: &mut Registry) {
+    reg.register_counter("RequestsServed", 1.0);
+    reg.register_gauge("queue_depth", 2.0);
+}

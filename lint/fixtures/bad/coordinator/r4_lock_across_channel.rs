@@ -1,0 +1,25 @@
+// Fixture: R4 must flag a Mutex guard held across a channel send and
+// an RwLock read guard held across a compute call.
+
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, RwLock};
+
+pub fn drain(lock: &Mutex<Vec<u64>>, tx: &Sender<u64>) {
+    let guard = lock.lock().unwrap();
+    for v in guard.iter() {
+        tx.send(*v).ok();
+    }
+}
+
+pub fn run_model(model: &RwLock<Model>, input: u64) -> u64 {
+    let m = model.read().unwrap();
+    m.forward(input)
+}
+
+pub struct Model;
+
+impl Model {
+    pub fn forward(&self, x: u64) -> u64 {
+        x
+    }
+}

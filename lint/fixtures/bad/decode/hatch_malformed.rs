@@ -1,0 +1,13 @@
+// Fixture: HATCH must flag a reason-less hatch and an unknown slug.
+// The reason-less hatch still suppresses its R3 finding; the unknown
+// slug suppresses nothing.
+
+pub fn checked_step(state: Option<u64>) -> u64 {
+    // lint: allow(panic)
+    state.unwrap()
+}
+
+pub fn other_step(state: Option<u64>) -> u64 {
+    // lint: allow(not-a-rule) -- unknown slug should be reported
+    state.expect("present")
+}

@@ -1,0 +1,15 @@
+// Fixture: R3 must flag unwrap/expect/panic! on the hot path.
+
+pub fn step(state: Option<u64>) -> u64 {
+    state.unwrap()
+}
+
+pub fn checked(state: Option<u64>) -> u64 {
+    state.expect("state present")
+}
+
+pub fn assert_ready(ready: bool) {
+    if !ready {
+        panic!("not ready");
+    }
+}

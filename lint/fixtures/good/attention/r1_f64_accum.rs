@@ -1,0 +1,10 @@
+// Fixture: f64 accumulation with one final rounding point is the
+// sanctioned pattern; R1 must stay silent.
+
+pub fn moment_sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += f64::from(*x);
+    }
+    acc as f32
+}

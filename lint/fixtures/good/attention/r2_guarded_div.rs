@@ -1,0 +1,18 @@
+// Fixture: both guard styles — `.max(EPS)` at the declaration and a
+// `guard_*` helper — must satisfy R2.
+
+pub fn normalize(row: &mut [f32], denom: f32) {
+    let safe_denom = denom.max(1e-6);
+    for x in row.iter_mut() {
+        *x /= safe_denom;
+    }
+}
+
+pub fn rescale(value: f64, y: &[f64]) -> f64 {
+    let row_sum = guard_denom(y[0]);
+    value / row_sum
+}
+
+fn guard_denom(x: f64) -> f64 {
+    x.max(1e-12)
+}

@@ -1,0 +1,25 @@
+// Fixture: snake_case names with unit suffixes satisfy R5.
+
+pub struct Registry {
+    samples: Vec<(String, f64)>,
+}
+
+impl Registry {
+    pub fn register_counter(&mut self, name: &str, value: f64) {
+        self.samples.push((name.to_string(), value));
+    }
+
+    pub fn register_gauge(&mut self, name: &str, value: f64) {
+        self.samples.push((name.to_string(), value));
+    }
+
+    pub fn register_histogram(&mut self, name: &str, value: f64) {
+        self.samples.push((name.to_string(), value));
+    }
+}
+
+pub fn export(reg: &mut Registry) {
+    reg.register_counter("requests_served_total", 1.0);
+    reg.register_gauge("session_state_bytes", 2.0);
+    reg.register_histogram("queue_wait_us", 3.0);
+}

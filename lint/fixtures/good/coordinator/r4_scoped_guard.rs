@@ -1,0 +1,14 @@
+// Fixture: copying out under the lock and dropping the guard before
+// the channel op is the sanctioned pattern; R4 must stay silent.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub fn drain(lock: &Mutex<Vec<u64>>, tx: &Sender<u64>) {
+    let guard = lock.lock().unwrap();
+    let pending = guard.clone();
+    drop(guard);
+    for v in pending {
+        tx.send(v).ok();
+    }
+}

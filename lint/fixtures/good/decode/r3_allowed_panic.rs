@@ -1,0 +1,7 @@
+// Fixture: a well-formed escape hatch (known slug + reason) silences
+// R3 and raises no HATCH finding.
+
+pub fn checked_step(state: Option<u64>) -> u64 {
+    // lint: allow(panic) -- fixture: invariant is established by the caller one frame up
+    state.unwrap()
+}

@@ -1,0 +1,10 @@
+// Fixture: typed-error returns are the sanctioned alternative; R3
+// must stay silent, including on non-panicking combinators.
+
+pub fn step(state: Option<u64>) -> Result<u64, String> {
+    state.ok_or_else(|| "missing decode state".to_string())
+}
+
+pub fn fallback(state: Option<u64>) -> u64 {
+    state.unwrap_or(0)
+}

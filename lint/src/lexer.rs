@@ -1,0 +1,370 @@
+//! A minimal Rust lexer: just enough token structure for the lint
+//! rules — identifiers, numbers, strings, and punctuation with
+//! two-character operators merged — plus line numbers and captured
+//! comments (escape hatches live in comments).
+//!
+//! This is deliberately not a full Rust grammar. The rules only need
+//! to distinguish "identifier next to `+=`" from "string containing
+//! `+=`", so the lexer's one hard job is never misclassifying string,
+//! char, comment, or raw-string boundaries.
+
+/// Token class. `Punct` covers all operators and delimiters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One token with the line it starts on (1-based).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// A comment (line or block, including delimiters) with its start line.
+pub type Comment = (usize, String);
+
+/// Two-character operators kept as single tokens so `+=` never splits
+/// into `+` `=` (rule R1 keys on the compound token).
+const MERGE2: [&str; 14] = [
+    "+=", "-=", "*=", "/=", "==", "!=", "<=", ">=", "&&", "||", "::", "->", "=>", "..",
+];
+
+fn lossy(bytes: &[u8], start: usize, end: usize) -> String {
+    String::from_utf8_lossy(&bytes[start..end.min(bytes.len())]).into_owned()
+}
+
+/// Length in bytes of a char literal at `start` (which must index a
+/// `'`), or `None` if the quote starts a lifetime or stray apostrophe.
+fn char_lit_len(src: &str, start: usize) -> Option<usize> {
+    let rest = &src[start + 1..];
+    let mut it = rest.char_indices();
+    let (_, first) = it.next()?;
+    if first == '\\' {
+        // `'\x'`-style: the escaped char, then anything up to the
+        // closing quote (covers `'\u{1F600}'`).
+        it.next()?;
+        for (off, ch) in it {
+            if ch == '\'' {
+                return Some(1 + off + 1);
+            }
+        }
+        None
+    } else if first != '\'' {
+        let (off, ch) = it.next()?;
+        if ch == '\'' {
+            Some(1 + off + 1)
+        } else {
+            None
+        }
+    } else {
+        None
+    }
+}
+
+/// If `start` begins a raw string (`r"…"`, `r#"…"#`, `br"…"`), return
+/// (index just past the opening quote, number of `#`s).
+fn raw_string_open(bytes: &[u8], start: usize) -> Option<(usize, usize)> {
+    let mut j = start;
+    if bytes[j] == b'b' {
+        j += 1;
+    }
+    if j >= bytes.len() || bytes[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < bytes.len() && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == b'"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn find_sub(bytes: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || from >= bytes.len() {
+        return None;
+    }
+    bytes[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| from + p)
+}
+
+/// Tokenize `src`, returning tokens and comments separately.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = bytes[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let j = find_sub(bytes, i, b"\n").unwrap_or(n);
+            comments.push((line, lossy(bytes, i, j)));
+            i = j;
+            continue;
+        }
+        // Block comment (nesting, as in Rust).
+        if c == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if bytes[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if bytes[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if bytes[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push((start_line, lossy(bytes, i, j)));
+            i = j;
+            continue;
+        }
+        // Raw string (must precede the ident branch: `r`/`b` are alpha).
+        if c == b'r' || c == b'b' {
+            if let Some((body, hashes)) = raw_string_open(bytes, i) {
+                let mut closer = vec![b'"'];
+                closer.resize(1 + hashes, b'#');
+                let k = find_sub(bytes, body, &closer).unwrap_or(n);
+                let end = (k + closer.len()).min(n);
+                let text = lossy(bytes, i, end);
+                line += text.matches('\n').count();
+                toks.push(Tok {
+                    kind: Kind::Str,
+                    text,
+                    line,
+                });
+                i = end;
+                continue;
+            }
+        }
+        // Regular / byte string.
+        if c == b'"' || (c == b'b' && i + 1 < n && bytes[i + 1] == b'"') {
+            let start_line = line;
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                if bytes[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if bytes[j] == b'\n' {
+                    line += 1;
+                }
+                if bytes[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let end = j.min(n);
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: lossy(bytes, i, end),
+                line: start_line,
+            });
+            i = end;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if let Some(len) = char_lit_len(src, i) {
+                toks.push(Tok {
+                    kind: Kind::Char,
+                    text: lossy(bytes, i, i + len),
+                    line,
+                });
+                i += len;
+                continue;
+            }
+            if i + 1 < n && (bytes[i + 1].is_ascii_alphabetic() || bytes[i + 1] == b'_') {
+                let mut j = i + 2;
+                while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_') {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: lossy(bytes, i, j),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: "'".to_string(),
+                line,
+            });
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i + 1;
+            while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: lossy(bytes, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Number: hex, or decimal with optional fraction / exponent /
+        // type suffix. The fraction requires a digit after `.` so that
+        // `0..n` lexes as `0` `..` `n`.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            if c == b'0' && j < n && bytes[j] == b'x' && j + 1 < n && is_hex(bytes[j + 1]) {
+                j += 1;
+                while j < n && is_hex(bytes[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (bytes[j].is_ascii_digit() || bytes[j] == b'_') {
+                    j += 1;
+                }
+                if j + 1 < n && bytes[j] == b'.' && bytes[j + 1].is_ascii_digit() {
+                    j += 2;
+                    while j < n && (bytes[j].is_ascii_digit() || bytes[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                if j < n && (bytes[j] == b'e' || bytes[j] == b'E') {
+                    let mut k = j + 1;
+                    if k < n && (bytes[k] == b'+' || bytes[k] == b'-') {
+                        k += 1;
+                    }
+                    if k < n && bytes[k].is_ascii_digit() {
+                        while k < n && bytes[k].is_ascii_digit() {
+                            k += 1;
+                        }
+                        j = k;
+                    }
+                }
+                while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_') {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Num,
+                text: lossy(bytes, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Two-char operator. Compared as bytes: `i + 2` may not be a
+        // char boundary when a multi-byte char follows the operator.
+        if i + 1 < n {
+            let two = [bytes[i], bytes[i + 1]];
+            if MERGE2.iter().any(|m| m.as_bytes() == two.as_slice()) {
+                toks.push(Tok {
+                    kind: Kind::Punct,
+                    text: lossy(bytes, i, i + 2),
+                    line,
+                });
+                i += 2;
+                continue;
+            }
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: lossy(bytes, i, i + 1),
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+fn is_hex(c: u8) -> bool {
+    c.is_ascii_hexdigit() || c == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn merges_compound_operators() {
+        assert_eq!(texts("a += b"), ["a", "+=", "b"]);
+        assert_eq!(texts("x /= y;"), ["x", "/=", "y", ";"]);
+        assert_eq!(texts("for i in 0..n"), ["for", "i", "in", "0", "..", "n"]);
+    }
+
+    #[test]
+    fn float_and_exponent_literals_stay_whole() {
+        assert_eq!(texts("den.max(1e-12)"), ["den", ".", "max", "(", "1e-12", ")"]);
+        assert_eq!(texts("let s = 0.0f64;"), ["let", "s", "=", "0.0f64", ";"]);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let (toks, comments) = lex("let s = \"a += b\"; // x += y\n");
+        assert_eq!(toks.iter().filter(|t| t.text == "+=").count(), 0);
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].1.contains("x += y"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let (toks, _) = lex("let r = r#\"den / sum\"#; let c = '/'; fn f<'a>() {}");
+        assert_eq!(toks.iter().filter(|t| t.text == "/").count(), 0);
+        assert!(toks.iter().any(|t| t.kind == Kind::Lifetime && t.text == "'a"));
+        assert!(toks.iter().any(|t| t.kind == Kind::Char && t.text == "'/'"));
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_track_newlines() {
+        let (toks, comments) = lex("a\nb\n// c\nd\n");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(comments[0].0, 3);
+        assert_eq!(toks[2].line, 4);
+    }
+
+    #[test]
+    fn block_comments_nest_and_count_lines() {
+        let (toks, comments) = lex("/* a /* b */ c\nmore */ after\n");
+        assert_eq!(comments.len(), 1);
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].text, "after");
+        assert_eq!(toks[0].line, 2);
+    }
+}

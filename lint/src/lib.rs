@@ -1,0 +1,124 @@
+//! taylor-lint: repo-specific static analysis for the TaylorShift
+//! serving stack.
+//!
+//! The general-purpose toolchain (rustc + clippy) cannot see this
+//! repo's *paper* invariants: that Taylor-moment accumulation must run
+//! in f64, that normalizer divisions must be guarded, that the serving
+//! hot path must not panic, that lock guards must not be held across
+//! channel handoffs, and that exported metrics follow one naming
+//! convention. This crate checks exactly those, over a lexed (not
+//! parsed) token stream — see `lint/README.md` for the rule catalogue
+//! and escape-hatch policy.
+//!
+//! Usage: `cargo run -p taylor-lint -- rust/src [--json]`.
+
+mod lexer;
+mod rules;
+
+pub use rules::{lint_source, slug_for, Finding};
+
+use std::path::{Path, PathBuf};
+
+/// Lint a file or directory tree. Directories are walked recursively;
+/// `target/`, `vendor/`, and dot-directories are skipped, and only
+/// `.rs` files are linted. Paths in findings are relative to `root`.
+pub fn run_path(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    if root.is_file() {
+        let src = std::fs::read_to_string(root)?;
+        let rel = root
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        findings.extend(lint_source(&rel, &src));
+        return Ok(findings);
+    }
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    for full in files {
+        let rel = full
+            .strip_prefix(root)
+            .unwrap_or(&full)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&full)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "target" || name == "vendor" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Machine-readable report: `{"count": N, "findings": [...]}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"count\": {},\n", findings.len()));
+    s.push_str("  \"findings\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        let sep = if i + 1 == findings.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}{}\n",
+            f.rule,
+            escape_json(&f.file),
+            f.line,
+            escape_json(&f.message),
+            sep
+        ));
+    }
+    s.push_str("  ]\n}");
+    s
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_shape_and_escaping() {
+        let findings = vec![Finding {
+            rule: "R2",
+            file: "attention/a.rs".to_string(),
+            line: 7,
+            message: "division by `den` \"raw\"".to_string(),
+        }];
+        let s = to_json(&findings);
+        assert!(s.contains("\"count\": 1"));
+        assert!(s.contains("\"rule\": \"R2\""));
+        assert!(s.contains("\"line\": 7"));
+        assert!(s.contains("\\\"raw\\\""));
+        let empty = to_json(&[]);
+        assert!(empty.contains("\"count\": 0"));
+    }
+}

@@ -1,0 +1,53 @@
+//! CLI for taylor-lint.
+//!
+//! Exit codes: 0 = clean, 1 = findings reported, 2 = usage or I/O
+//! error (so CI can tell "rule violation" from "could not run").
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: taylor-lint [--json] <path>...\n\n\
+    Lints .rs files under each <path> (file or directory) against the\n\
+    TaylorShift repo invariants R1-R5. See lint/README.md.";
+
+fn main() -> ExitCode {
+    let mut as_json = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => as_json = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            _ => roots.push(PathBuf::from(arg)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let mut findings = Vec::new();
+    for root in &roots {
+        match taylor_lint::run_path(root) {
+            Ok(found) => findings.extend(found),
+            Err(e) => {
+                eprintln!("taylor-lint: {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if as_json {
+        println!("{}", taylor_lint::to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        println!("{} finding(s)", findings.len());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

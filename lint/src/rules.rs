@@ -1,0 +1,719 @@
+//! The five taylor-lint rules, the escape-hatch grammar, and
+//! suppression.
+//!
+//! Rules are scoped by relative path (so fixtures exercise them by
+//! living under matching directory names):
+//!
+//! - **R1 f32-accum** (`attention/`, `decode/`, `model/`): compound
+//!   accumulation (`+=`) must target an `f64` accumulator.
+//! - **R2 unguarded-div** (same scope): division by a moment/sum-named
+//!   denominator must be guarded (`guard_denom`, `.max(EPS)`).
+//! - **R3 panic** (`coordinator/engine.rs`, `decode/`, `model/`):
+//!   no `unwrap`/`expect`/`panic!` on the serving hot path.
+//! - **R4 lock-across-channel** (`coordinator/`, `util/threadpool.rs`):
+//!   a Mutex/RwLock guard must not stay live across channel ops or
+//!   compute calls.
+//! - **R5 metric-name** (`coordinator/metrics.rs`): registered metric
+//!   names must be snake_case with a `_bytes`/`_us`/`_total` suffix.
+//!
+//! Escape hatch: `// lint: allow(<slug>) -- <reason>` on the finding's
+//! line or the line above. A hatch with a missing/short reason or an
+//! unknown slug is itself a finding (rule `HATCH`).
+
+use crate::lexer::{lex, Comment, Kind, Tok};
+use std::collections::{HashMap, HashSet};
+
+/// One lint finding. `rule` is the rule ID (`R1`..`R5`, `HATCH`).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Escape-hatch slug for a suppressible rule.
+pub fn slug_for(rule: &str) -> Option<&'static str> {
+    match rule {
+        "R1" => Some("f32-accum"),
+        "R2" => Some("unguarded-div"),
+        "R3" => Some("panic"),
+        "R4" => Some("lock-across-channel"),
+        "R5" => Some("metric-name"),
+        _ => None,
+    }
+}
+
+const KNOWN_SLUGS: [&str; 5] = [
+    "f32-accum",
+    "unguarded-div",
+    "panic",
+    "lock-across-channel",
+    "metric-name",
+];
+
+const DENOM_NAMES: [&str; 6] = ["den", "denom", "sum", "total", "norm", "z"];
+const DENOM_SUFFIXES: [&str; 5] = ["_den", "_denom", "_sum", "_total", "_norm"];
+
+const CHANNEL_OPS: [&str; 5] = ["send", "recv", "try_recv", "recv_timeout", "send_timeout"];
+const COMPUTE_CALLS: [&str; 3] = ["step", "forward", "forward_batch"];
+
+// ------------------------------------------------------------- scoping
+
+fn in_dir(rel: &str, dir: &str) -> bool {
+    rel.starts_with(&format!("{dir}/")) || rel.contains(&format!("/{dir}/"))
+}
+
+fn is_file(rel: &str, file: &str) -> bool {
+    rel == file || rel.ends_with(&format!("/{file}"))
+}
+
+fn r1r2_scope(rel: &str) -> bool {
+    in_dir(rel, "attention") || in_dir(rel, "decode") || in_dir(rel, "model")
+}
+
+fn r3_scope(rel: &str) -> bool {
+    is_file(rel, "coordinator/engine.rs") || in_dir(rel, "decode") || in_dir(rel, "model")
+}
+
+fn r4_scope(rel: &str) -> bool {
+    in_dir(rel, "coordinator") || is_file(rel, "util/threadpool.rs")
+}
+
+fn r5_scope(rel: &str) -> bool {
+    is_file(rel, "coordinator/metrics.rs")
+}
+
+// ------------------------------------------------------- token helpers
+
+/// Index of the token closing the bracket at `open_idx`.
+fn match_close(toks: &[Tok], open_idx: usize) -> usize {
+    let open = toks[open_idx].text.clone();
+    let close = match open.as_str() {
+        "{" => "}",
+        "(" => ")",
+        _ => "]",
+    };
+    let mut depth = 0i64;
+    for (i, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.text == open {
+            depth += 1;
+        } else if t.text == close {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Line ranges covered by `#[cfg(test)]` / `#[test]` items: lint rules
+/// do not apply inside tests (tests may unwrap freely).
+fn test_lines(toks: &[Tok]) -> HashSet<usize> {
+    let mut out = HashSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && i + 1 < toks.len() && toks[i + 1].text == "[" {
+            let close = match_close(toks, i + 1);
+            let attr: Vec<&str> = toks
+                .get(i + 2..close)
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| t.text.as_str())
+                .collect();
+            let is_test = attr.first() == Some(&"test")
+                || (attr.len() >= 3 && attr[0] == "cfg" && attr[1] == "(" && attr[2] == "test");
+            if is_test {
+                let mut j = close + 1;
+                while j < toks.len() && toks[j].text != "{" {
+                    if toks[j].text == ";" {
+                        break;
+                    }
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].text == "{" {
+                    let end = match_close(toks, j);
+                    for ln in toks[i].line..=toks[end].line {
+                        out.insert(ln);
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Index of the `;` ending the statement starting at `i` (brackets
+/// opened inside the statement are skipped over).
+fn stmt_end(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => depth -= 1,
+            ";" if depth <= 0 => return i,
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Nearest preceding `let [mut] <name> … ;` statement, as an inclusive
+/// token range.
+fn find_decl(toks: &[Tok], use_idx: usize, name: &str) -> Option<(usize, usize)> {
+    let mut i = use_idx;
+    while i > 0 {
+        i -= 1;
+        if toks[i].kind == Kind::Ident && toks[i].text == "let" {
+            let mut j = i + 1;
+            if j < toks.len() && toks[j].text == "mut" {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].kind == Kind::Ident && toks[j].text == name {
+                return Some((i, stmt_end(toks, i)));
+            }
+        }
+    }
+    None
+}
+
+/// Absorb the postfix chain (field/method/index accesses) starting at
+/// the primary token `j`, returning all token texts in the chain.
+fn chain_after(toks: &[Tok], j: usize) -> Vec<String> {
+    let mut texts = vec![toks[j].text.clone()];
+    let mut k = j + 1;
+    while k < toks.len() {
+        let t = toks[k].text.as_str();
+        if t == "." || t == "::" {
+            texts.push(t.to_string());
+            k += 1;
+            if k < toks.len() {
+                texts.push(toks[k].text.clone());
+                k += 1;
+            }
+            continue;
+        }
+        if t == "(" || t == "[" {
+            let close = match_close(toks, k);
+            texts.extend(toks[k..=close].iter().map(|x| x.text.clone()));
+            k = close + 1;
+            continue;
+        }
+        break;
+    }
+    texts
+}
+
+/// `true` if the texts contain a `.max(` call anywhere.
+fn has_max_call<S: AsRef<str>>(texts: &[S]) -> bool {
+    texts.windows(3).any(|w| {
+        w[0].as_ref() == "." && w[1].as_ref() == "max" && w[2].as_ref() == "("
+    })
+}
+
+fn denom_name_matches(name: &str) -> bool {
+    DENOM_NAMES.contains(&name) || DENOM_SUFFIXES.iter().any(|s| name.ends_with(s))
+}
+
+/// Float-literal shape that infers its type from use: `1.5`, `1.`-free
+/// forms like `0.0`, `1e-3` — but not suffixed forms (`0.0f32`).
+fn is_float_literal(s: &str) -> bool {
+    let b = s.as_bytes();
+    if b.first().is_none_or(|c| !c.is_ascii_digit()) {
+        return false;
+    }
+    let mut i = 1usize;
+    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' {
+        i += 1;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == b.len() {
+            return true;
+        }
+    }
+    exponent_to_end(b, i)
+}
+
+fn exponent_to_end(b: &[u8], mut i: usize) -> bool {
+    if i >= b.len() || (b[i] != b'e' && b[i] != b'E') {
+        return false;
+    }
+    i += 1;
+    if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+        i += 1;
+    }
+    if i >= b.len() || !b[i].is_ascii_digit() {
+        return false;
+    }
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    i == b.len()
+}
+
+enum FloatKind {
+    F32,
+    F64,
+    Inferred,
+}
+
+/// Accumulator type evidence from its `let` declaration tokens.
+fn decl_float_kind(decl: &[Tok]) -> Option<FloatKind> {
+    if decl.iter().any(|t| t.text.contains("f64")) {
+        return Some(FloatKind::F64);
+    }
+    if decl.iter().any(|t| t.text.contains("f32")) {
+        return Some(FloatKind::F32);
+    }
+    if decl
+        .iter()
+        .any(|t| t.kind == Kind::Num && is_float_literal(&t.text))
+    {
+        return Some(FloatKind::Inferred);
+    }
+    None
+}
+
+// --------------------------------------------------------------- rules
+
+/// R1: `+=` accumulation onto an f32 (or inferred-f32) accumulator.
+fn rule_r1(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r1r2_scope(rel) {
+        return;
+    }
+    for i in 1..toks.len() {
+        if toks[i].text != "+=" {
+            continue;
+        }
+        let lhs = &toks[i - 1];
+        if lhs.kind != Kind::Ident {
+            continue;
+        }
+        // `x.field += …` / `*slot += …` accumulate through a place we
+        // cannot type-resolve here; skip.
+        if i >= 2 && (toks[i - 2].text == "." || toks[i - 2].text == "*") {
+            continue;
+        }
+        let Some((ds, de)) = find_decl(toks, i, &lhs.text) else {
+            continue;
+        };
+        match decl_float_kind(&toks[ds..=de]) {
+            Some(FloatKind::F32) => findings.push(Finding {
+                rule: "R1",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "accumulator `{}` is f32; Taylor-moment accumulation must run in f64 \
+                     before the single f32 rounding point",
+                    lhs.text
+                ),
+            }),
+            Some(FloatKind::Inferred) => {
+                let end = stmt_end(toks, i);
+                let rhs = &toks[i + 1..=end];
+                if !rhs.iter().any(|t| t.text.contains("f64")) {
+                    findings.push(Finding {
+                        rule: "R1",
+                        file: rel.to_string(),
+                        line: toks[i].line,
+                        message: format!(
+                            "accumulator `{}` infers f32 from its uses; declare it f64 \
+                             (e.g. `0.0f64`) for Taylor-moment accumulation",
+                            lhs.text
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// R2: division by a denominator-named value with no guard in its use
+/// chain or declaration.
+fn rule_r2(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r1r2_scope(rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].text != "/" && toks[i].text != "/=" {
+            continue;
+        }
+        let j = i + 1;
+        if j >= toks.len() || toks[j].kind != Kind::Ident {
+            continue;
+        }
+        let root = toks[j].text.clone();
+        if root.contains("guard") || has_max_call(&chain_after(toks, j)) {
+            continue;
+        }
+        if !denom_name_matches(&root) {
+            continue;
+        }
+        if let Some((ds, de)) = find_decl(toks, i, &root) {
+            let decl = &toks[ds..=de];
+            if decl.iter().any(|x| x.text.contains("guard")) {
+                continue;
+            }
+            let dtexts: Vec<&str> = decl.iter().map(|x| x.text.as_str()).collect();
+            if has_max_call(&dtexts) {
+                continue;
+            }
+        }
+        findings.push(Finding {
+            rule: "R2",
+            file: rel.to_string(),
+            line: toks[i].line,
+            message: format!(
+                "division by `{root}` (a Taylor-softmax normalizer) without a guard; \
+                 wrap it in `guard_denom`/`.max(EPS)` or branch explicitly"
+            ),
+        });
+    }
+}
+
+/// R3: `unwrap`/`expect`/`panic!` on the serving hot path.
+fn rule_r3(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r3_scope(rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let nxt = toks.get(i + 1).map_or("", |x| x.text.as_str());
+        if (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && toks[i - 1].text == "."
+            && nxt == "("
+        {
+            findings.push(Finding {
+                rule: "R3",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`.{}()` on the serving hot path; return a typed error instead",
+                    t.text
+                ),
+            });
+        } else if t.text == "panic" && nxt == "!" {
+            findings.push(Finding {
+                rule: "R3",
+                file: rel.to_string(),
+                line: t.line,
+                message: "`panic!` on the serving hot path; return a typed error instead"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// R4: a lock guard staying live across channel ops or compute calls.
+/// The live region runs from the guard's `let` to the close of the
+/// enclosing block, or to an explicit `drop(guard)`.
+fn rule_r4(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r4_scope(rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].kind != Kind::Ident || toks[i].text != "let" {
+            continue;
+        }
+        let end = stmt_end(toks, i);
+        let stmt_texts: Vec<&str> = toks[i..=end].iter().map(|t| t.text.as_str()).collect();
+        let has_lock = stmt_texts.windows(3).any(|w| {
+            w[0] == "." && (w[1] == "lock" || w[1] == "read" || w[1] == "write") && w[2] == "("
+        });
+        if !has_lock {
+            continue;
+        }
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].text == "mut" {
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].kind != Kind::Ident {
+            continue;
+        }
+        let guard_name = toks[j].text.clone();
+        let mut depth = 0i64;
+        let mut k = end + 1;
+        while k < toks.len() {
+            let txt = toks[k].text.as_str();
+            if txt == "{" {
+                depth += 1;
+            } else if txt == "}" {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            } else if txt == "drop"
+                && k + 2 < toks.len()
+                && toks[k + 1].text == "("
+                && toks[k + 2].text == guard_name
+            {
+                break;
+            } else if toks[k].kind == Kind::Ident
+                && k > 0
+                && toks[k - 1].text == "."
+                && toks.get(k + 1).is_some_and(|t| t.text == "(")
+            {
+                if CHANNEL_OPS.contains(&txt) {
+                    findings.push(Finding {
+                        rule: "R4",
+                        file: rel.to_string(),
+                        line: toks[k].line,
+                        message: format!(
+                            "`{guard_name}` (a Mutex/RwLock guard) is held across channel \
+                             `{txt}`; drop the guard first"
+                        ),
+                    });
+                } else if COMPUTE_CALLS.contains(&txt) || txt.starts_with("taylor_") {
+                    findings.push(Finding {
+                        rule: "R4",
+                        file: rel.to_string(),
+                        line: toks[k].line,
+                        message: format!(
+                            "`{guard_name}` (a Mutex/RwLock guard) is held across compute \
+                             call `{txt}`; drop the guard first"
+                        ),
+                    });
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+fn metric_name_ok(name: &str) -> bool {
+    let b = name.as_bytes();
+    let snake = !b.is_empty()
+        && b[0].is_ascii_lowercase()
+        && b.iter()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == b'_');
+    snake && ["_bytes", "_us", "_total"].iter().any(|s| name.ends_with(s))
+}
+
+/// R5: metric names passed to `register_counter`/`register_gauge`/
+/// `register_histogram` must be snake_case with a unit suffix.
+fn rule_r5(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r5_scope(rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        if t.text != "register_counter"
+            && t.text != "register_gauge"
+            && t.text != "register_histogram"
+        {
+            continue;
+        }
+        // Skip the definitions themselves.
+        if i > 0 && toks[i - 1].text == "fn" {
+            continue;
+        }
+        if toks.get(i + 1).is_none_or(|x| x.text != "(") {
+            continue;
+        }
+        let close = match_close(toks, i + 1);
+        let Some(inner) = toks.get(i + 2..close) else {
+            continue;
+        };
+        let Some(lit) = inner.iter().find(|x| x.kind == Kind::Str) else {
+            continue;
+        };
+        let name = lit.text.trim_matches('"').to_string();
+        if !metric_name_ok(&name) {
+            findings.push(Finding {
+                rule: "R5",
+                file: rel.to_string(),
+                line: lit.line,
+                message: format!(
+                    "metric name `{name}` must be snake_case with a unit suffix \
+                     (_bytes, _us, _total)"
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------- escape hatch
+
+/// Parse every `lint: allow(<slug>) -- <reason>` occurrence in one
+/// comment's text.
+fn parse_hatches(text: &str) -> Vec<(String, Option<String>)> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find("lint:") {
+        rest = &rest[pos + 5..];
+        let after = rest.trim_start();
+        let Some(args) = after.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            continue;
+        };
+        let slug = &args[..close];
+        let slug_ok = !slug.is_empty()
+            && slug
+                .bytes()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-');
+        if !slug_ok {
+            continue;
+        }
+        let tail = args[close + 1..].trim_start();
+        let reason = tail.strip_prefix("--").map(|r| {
+            let line = &r[..r.find('\n').unwrap_or(r.len())];
+            line.trim().to_string()
+        });
+        let reason = match reason {
+            Some(r) if !r.is_empty() => Some(r),
+            _ => None,
+        };
+        out.push((slug.to_string(), reason));
+        rest = &args[close + 1..];
+    }
+    out
+}
+
+/// HATCH: malformed escape hatches are findings in their own right.
+fn rule_hatch(rel: &str, comments: &[&Comment], findings: &mut Vec<Finding>) {
+    for (line, text) in comments.iter().map(|c| (c.0, c.1.as_str())) {
+        for (slug, reason) in parse_hatches(text) {
+            if !KNOWN_SLUGS.contains(&slug.as_str()) {
+                findings.push(Finding {
+                    rule: "HATCH",
+                    file: rel.to_string(),
+                    line,
+                    message: format!("unknown lint escape-hatch slug `{slug}`"),
+                });
+            } else if reason.as_deref().is_none_or(|r| r.len() < 8) {
+                findings.push(Finding {
+                    rule: "HATCH",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "escape hatch `allow({slug})` must carry a reason: \
+                         `// lint: allow({slug}) -- <why>`"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- per file
+
+/// Lint one file's source. `rel` is the path relative to the lint
+/// root, with `/` separators — rule scoping keys on it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let (toks, comments) = lex(src);
+    let skip = test_lines(&toks);
+    let mut pre: Vec<Finding> = Vec::new();
+    rule_r1(rel, &toks, &mut pre);
+    rule_r2(rel, &toks, &mut pre);
+    rule_r3(rel, &toks, &mut pre);
+    rule_r4(rel, &toks, &mut pre);
+    rule_r5(rel, &toks, &mut pre);
+    pre.retain(|f| !skip.contains(&f.line));
+    let non_test: Vec<&Comment> = comments.iter().filter(|c| !skip.contains(&c.0)).collect();
+    rule_hatch(rel, &non_test, &mut pre);
+
+    // Suppression: an `allow(<slug>)` comment on the finding's line or
+    // the line above silences R1–R5 (never HATCH).
+    let mut by_line: HashMap<usize, &str> = HashMap::new();
+    for (ln, txt) in &comments {
+        by_line.insert(*ln, txt.as_str());
+    }
+    pre.retain(|f| {
+        let Some(slug) = slug_for(f.rule) else {
+            return true;
+        };
+        let needle = format!("allow({slug})");
+        let hit = [f.line, f.line.wrapping_sub(1)]
+            .iter()
+            .any(|ln| by_line.get(ln).is_some_and(|t| t.contains(&needle)));
+        !hit
+    });
+    pre
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_on_f32_and_inferred_accumulators_only_in_scope() {
+        let src = "fn f(xs: &[f32]) -> f32 {\n    let mut acc = 0.0f32;\n    for x in xs {\n        acc += *x;\n    }\n    acc\n}\n";
+        assert_eq!(rules_of(&lint_source("attention/a.rs", src)), ["R1"]);
+        assert!(lint_source("util/a.rs", src).is_empty());
+        let ok = src.replace("0.0f32", "0.0f64");
+        assert!(lint_source("attention/a.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn r2_fires_on_unguarded_denominators() {
+        let src = "fn f(y: &[f64]) -> f64 {\n    let denom = y[0];\n    1.0 / denom\n}\n";
+        assert_eq!(rules_of(&lint_source("decode/a.rs", src)), ["R2"]);
+        let ok = "fn f(y: &[f64]) -> f64 {\n    let denom = y[0].max(1e-12);\n    1.0 / denom\n}\n";
+        assert!(lint_source("decode/a.rs", ok).is_empty());
+        let ok2 = "fn f(y: &[f64]) -> f64 {\n    let denom = guard_denom(y[0]);\n    1.0 / denom\n}\n";
+        assert!(lint_source("decode/a.rs", ok2).is_empty());
+    }
+
+    #[test]
+    fn r3_fires_on_engine_but_not_other_coordinator_files() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert_eq!(rules_of(&lint_source("coordinator/engine.rs", src)), ["R3"]);
+        assert!(lint_source("coordinator/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_lock_across_send_fires_and_drop_ends_the_region() {
+        let bad = "fn f() {\n    let g = m.lock().unwrap();\n    tx.send(1).ok();\n}\n";
+        assert_eq!(rules_of(&lint_source("coordinator/a.rs", bad)), ["R4"]);
+        let ok = "fn f() {\n    let g = m.lock().unwrap();\n    let v = g.len();\n    drop(g);\n    tx.send(v).ok();\n}\n";
+        assert!(lint_source("coordinator/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r5_checks_names_at_call_sites_only() {
+        let src = "fn export(r: &mut R) {\n    r.register_counter(\"BadName\", 1.0);\n    r.register_counter(\"good_total\", 1.0);\n}\nfn register_counter() {}\n";
+        let found = lint_source("coordinator/metrics.rs", src);
+        assert_eq!(rules_of(&found), ["R5"]);
+        assert!(found[0].message.contains("BadName"));
+    }
+
+    #[test]
+    fn hatches_suppress_with_reason_and_report_without() {
+        let with = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic) -- this reason is long enough\n    x.unwrap()\n}\n";
+        assert!(lint_source("decode/a.rs", with).is_empty());
+        let without = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic)\n    x.unwrap()\n}\n";
+        assert_eq!(rules_of(&lint_source("decode/a.rs", without)), ["HATCH"]);
+        let unknown = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(nonsense) -- some reason here\n    x.unwrap()\n}\n";
+        let found = lint_source("decode/a.rs", unknown);
+        assert_eq!(rules_of(&found), ["R3", "HATCH"]);
+    }
+
+    #[test]
+    fn findings_inside_test_modules_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let x: Option<u32> = None;\n        x.unwrap();\n    }\n}\n";
+        assert!(lint_source("decode/a.rs", src).is_empty());
+    }
+}

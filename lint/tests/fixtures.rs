@@ -1,0 +1,88 @@
+//! Fixture tests: every rule must fire on its known-bad fixture and
+//! stay silent on the known-good tree.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use taylor_lint::Finding;
+
+fn run_on(tree: &str) -> Vec<Finding> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(tree);
+    taylor_lint::run_path(&root).expect("fixture tree readable")
+}
+
+fn render(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn bad_fixtures_fire_every_rule() {
+    let findings = run_on("bad");
+    let rules: HashSet<&str> = findings.iter().map(|f| f.rule).collect();
+    for rule in ["R1", "R2", "R3", "R4", "R5", "HATCH"] {
+        assert!(
+            rules.contains(rule),
+            "rule {rule} produced no finding on fixtures/bad; got:\n{}",
+            render(&findings)
+        );
+    }
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    let findings = run_on("good");
+    assert!(
+        findings.is_empty(),
+        "fixtures/good must lint clean, got:\n{}",
+        render(&findings)
+    );
+}
+
+fn fired(findings: &[Finding], rule: &str, file: &str) -> bool {
+    findings.iter().any(|f| f.rule == rule && f.file == file)
+}
+
+#[test]
+fn each_rule_anchors_to_its_fixture_file() {
+    let findings = run_on("bad");
+    assert!(fired(&findings, "R1", "attention/r1_f32_accum.rs"));
+    assert!(fired(&findings, "R2", "attention/r2_unguarded_div.rs"));
+    assert!(fired(&findings, "R3", "decode/r3_panics.rs"));
+    assert!(fired(&findings, "R4", "coordinator/r4_lock_across_channel.rs"));
+    assert!(fired(&findings, "R5", "coordinator/metrics.rs"));
+    assert!(fired(&findings, "HATCH", "decode/hatch_malformed.rs"));
+}
+
+#[test]
+fn r3_fires_once_per_panic_site() {
+    let findings = run_on("bad");
+    let r3: Vec<&Finding> = findings
+        .iter()
+        .filter(|f| f.rule == "R3" && f.file == "decode/r3_panics.rs")
+        .collect();
+    // unwrap(), expect(), panic! — one finding each.
+    assert_eq!(r3.len(), 3, "got:\n{}", render(&findings));
+}
+
+#[test]
+fn reasonless_hatch_suppresses_rule_but_reports_hatch() {
+    let findings = run_on("bad");
+    // The `allow(panic)` hatch without a reason still silences its R3
+    // finding (line 7) but is reported itself.
+    assert!(!findings
+        .iter()
+        .any(|f| f.rule == "R3" && f.file == "decode/hatch_malformed.rs" && f.line == 7));
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "HATCH" && f.file == "decode/hatch_malformed.rs" && f.line == 6));
+    // The unknown slug suppresses nothing: its R3 survives.
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "R3" && f.file == "decode/hatch_malformed.rs" && f.line == 12));
+}

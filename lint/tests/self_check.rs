@@ -1,0 +1,21 @@
+//! Self-check: taylor-lint must run clean over the repo's own
+//! sources. This is the same invocation CI gates on; if a change to
+//! `rust/src` trips a rule, this test points at the exact line.
+
+use std::path::Path;
+
+#[test]
+fn repo_sources_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let findings = taylor_lint::run_path(&root).expect("rust/src readable");
+    assert!(
+        findings.is_empty(),
+        "taylor-lint must run clean on rust/src; fix the finding or add a \
+         reasoned `// lint: allow(<slug>) -- <why>` hatch:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -22,6 +22,7 @@
 //! with it.
 
 use crate::tensor::Tensor;
+use crate::util::numeric::guard_denom;
 
 /// Taylor-moment accumulators mirroring `RecurrentState` (f64 state,
 /// unscaled `u = [1 | v]` rows; see `decode/recurrent.rs` for the
@@ -105,7 +106,7 @@ impl Moments {
                 }
             }
         }
-        let denom = y[0];
+        let denom = guard_denom(y[0]);
         let rescale = (self.len as f64 / d as f64).sqrt();
         (0..d).map(|c| (y[c + 1] / denom * rescale) as f32).collect()
     }
@@ -185,7 +186,7 @@ pub fn causal_taylor(
                     num[c] += w * val[c] as f64;
                 }
             }
-            let rescale = (new_len as f64 / d as f64).sqrt() / den.max(1e-12);
+            let rescale = (new_len as f64 / d as f64).sqrt() / guard_denom(den);
             for (o, &x) in out.row_mut(t).iter_mut().zip(&num) {
                 *o = (x * rescale) as f32;
             }

@@ -1,6 +1,7 @@
 //! Standard softmax attention (Vaswani et al.) — the paper's baseline.
 
 use crate::tensor::Tensor;
+use crate::util::numeric::guard_denom;
 
 /// `softmax(QKᵀ/√d) V` with numerically-stable row-max subtraction.
 pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
@@ -11,13 +12,16 @@ pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
     for i in 0..n {
         let row = scores.row_mut(i);
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
+        // Same discipline as the Taylor branches: accumulate the
+        // normalizer in f64 and guard it before the f32 rounding point.
+        let mut sum = 0.0f64;
         for x in row.iter_mut() {
             *x = (*x - max).exp();
-            sum += *x;
+            sum += f64::from(*x);
         }
+        let inv = (1.0 / guard_denom(sum)) as f32;
         for x in row.iter_mut() {
-            *x /= sum;
+            *x *= inv;
         }
     }
     scores.matmul(v)

@@ -36,6 +36,33 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Engine-internal failures. Surfaced to waiting requests as
+/// [`RequestError::ExecFailed`] and to constructors as `anyhow` errors —
+/// the engine thread never panics on the request path (lint rule R3).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The executor advertises no supported batch sizes.
+    NoBatchSizes,
+    /// A registry executor was configured with no sequence buckets.
+    EmptyBuckets,
+    /// An executable returned no output buffers.
+    NoOutputs { artifact: String },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NoBatchSizes => write!(f, "executor advertises no batch sizes"),
+            Self::EmptyBuckets => write!(f, "registry executor configured with no buckets"),
+            Self::NoOutputs { artifact } => {
+                write!(f, "artifact {artifact} returned no outputs")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
 /// Executes one padded batch; implementations own the device state.
 pub trait BatchExecutor {
     /// `tokens` is a rectangular (b, bucket) matrix (already padded to a
@@ -435,6 +462,18 @@ fn run_decode(
     }
 }
 
+/// Smallest supported executable batch that fits all `k` requests,
+/// falling back to the largest supported batch when `k` exceeds it
+/// (max_batch policy should match the largest artifact batch).
+fn select_exec_batch(k: usize, sizes: &[usize]) -> Result<usize, EngineError> {
+    sizes
+        .iter()
+        .copied()
+        .find(|&b| b >= k)
+        .or_else(|| sizes.iter().copied().max())
+        .ok_or(EngineError::NoBatchSizes)
+}
+
 fn run_batch<E: BatchExecutor>(
     executor: &mut E,
     batch: PendingBatch,
@@ -445,14 +484,21 @@ fn run_batch<E: BatchExecutor>(
     let k = batch.requests.len();
     debug_assert!(k > 0);
     let route = batch.route;
-    // Smallest supported executable batch that fits all k requests
-    // (max_batch policy should match the largest artifact batch).
-    let exec_b = executor
-        .batch_sizes()
-        .iter()
-        .copied()
-        .find(|&b| b >= k)
-        .unwrap_or_else(|| *executor.batch_sizes().last().unwrap());
+    let exec_b = match select_exec_batch(k, executor.batch_sizes()) {
+        Ok(b) => b,
+        Err(e) => {
+            // A misconfigured executor fails every waiter with a typed
+            // error instead of panicking the engine thread.
+            let msg = e.to_string();
+            for (_, responder_id) in batch.requests {
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+                if let Some(responder) = waiters.remove(&responder_id) {
+                    let _ = responder.send(Err(RequestError::ExecFailed(msg.clone())));
+                }
+            }
+            return;
+        }
+    };
     let pad_id = executor.pad_id();
 
     // Assemble the padded token matrix.
@@ -549,10 +595,13 @@ impl RegistryExecutor {
                 }
             }
         }
-        let param_src = format!(
-            "{prefix}_efficient_infer_b{}_n{}",
-            batch_sizes[0], buckets[0]
-        );
+        let &b0 = batch_sizes
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("{}", EngineError::NoBatchSizes))?;
+        let &n0 = buckets
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("{}", EngineError::EmptyBuckets))?;
+        let param_src = format!("{prefix}_efficient_infer_b{b0}_n{n0}");
         let params = registry
             .load_params(&param_src)?
             .iter()
@@ -592,8 +641,14 @@ impl BatchExecutor for RegistryExecutor {
             .chain(std::iter::once(&tokens_lit))
             .collect();
         let outputs = exe.run(&inputs).map_err(|e| e.to_string())?;
+        let first = outputs.first().ok_or_else(|| {
+            EngineError::NoOutputs {
+                artifact: name.clone(),
+            }
+            .to_string()
+        })?;
         let logits =
-            crate::runtime::literal::literal_to_tensor(&outputs[0]).map_err(|e| e.to_string())?;
+            crate::runtime::literal::literal_to_tensor(first).map_err(|e| e.to_string())?;
         let (b, c) = (logits.shape()[0], logits.shape()[1]);
         Ok((0..b)
             .map(|i| logits.data()[i * c..(i + 1) * c].to_vec())
@@ -816,6 +871,49 @@ mod tests {
         drop(engine); // shutdown must flush, not orphan
         let result = rx.recv().unwrap();
         assert!(result.is_ok(), "drained on shutdown: {result:?}");
+    }
+
+    #[test]
+    fn select_exec_batch_picks_smallest_fit() {
+        assert_eq!(select_exec_batch(3, &[1, 4, 8]), Ok(4));
+        assert_eq!(select_exec_batch(1, &[1, 4, 8]), Ok(1));
+        assert_eq!(
+            select_exec_batch(9, &[1, 4, 8]),
+            Ok(8),
+            "overflow falls back to the largest supported batch"
+        );
+        assert_eq!(select_exec_batch(1, &[]), Err(EngineError::NoBatchSizes));
+    }
+
+    #[test]
+    fn empty_batch_sizes_fail_typed_not_panic() {
+        let engine = Engine::start_with(EngineConfig::default(), move || {
+            Ok(MockExecutor {
+                batch_sizes: vec![],
+                fail: false,
+                delay: Duration::ZERO,
+                executed_batches: Arc::new(AtomicUsize::new(0)),
+            })
+        })
+        .unwrap();
+        let err = engine.infer(vec![1, 2, 3]).unwrap_err();
+        match err {
+            RequestError::ExecFailed(msg) => {
+                assert!(msg.contains("no batch sizes"), "{msg}")
+            }
+            other => panic!("expected ExecFailed, got {other:?}"),
+        }
+        assert_eq!(engine.in_flight(), 0, "waiter accounting still balances");
+    }
+
+    #[test]
+    fn engine_error_display() {
+        assert!(EngineError::NoBatchSizes.to_string().contains("no batch sizes"));
+        assert!(EngineError::EmptyBuckets.to_string().contains("buckets"));
+        let e = EngineError::NoOutputs {
+            artifact: "serve_direct_infer_b1_n128".into(),
+        };
+        assert!(e.to_string().contains("serve_direct_infer_b1_n128"));
     }
 
     // --- whole-model streaming decode ---

@@ -68,6 +68,59 @@ impl LatencyHistogram {
     }
 }
 
+/// One exported scalar sample from [`Metrics::export`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Registered metric name: snake_case with a unit suffix
+    /// (`_bytes`, `_us`, `_total`) — enforced by taylor-lint rule R5.
+    pub name: &'static str,
+    /// Derived statistic for histograms (`"p50"`, `"p99"`, `"mean"`,
+    /// `"count"`); empty for plain counters and gauges.
+    pub stat: &'static str,
+    /// Per-layer gauge index (a label, not part of the name).
+    pub layer: Option<usize>,
+    pub value: f64,
+}
+
+/// Register a monotonic counter sample.
+fn register_counter(out: &mut Vec<Sample>, name: &'static str, v: &AtomicU64) {
+    out.push(Sample {
+        name,
+        stat: "",
+        layer: None,
+        value: v.load(Ordering::Relaxed) as f64,
+    });
+}
+
+/// Register a gauge sample, optionally labelled with a layer index.
+fn register_gauge(out: &mut Vec<Sample>, name: &'static str, layer: Option<usize>, value: u64) {
+    out.push(Sample {
+        name,
+        stat: "",
+        layer,
+        value: value as f64,
+    });
+}
+
+/// Register the derived samples of a latency histogram. The registered
+/// base name carries the `_us` unit; the statistic rides in
+/// [`Sample::stat`] (count is a raw sample count, not µs).
+fn register_histogram(out: &mut Vec<Sample>, name: &'static str, h: &LatencyHistogram) {
+    for (stat, value) in [
+        ("count", h.count() as f64),
+        ("mean", h.mean().as_micros() as f64),
+        ("p50", h.quantile(0.5).as_micros() as f64),
+        ("p99", h.quantile(0.99).as_micros() as f64),
+    ] {
+        out.push(Sample {
+            name,
+            stat,
+            layer: None,
+            value,
+        });
+    }
+}
+
 /// All engine metrics.
 #[derive(Default)]
 pub struct Metrics {
@@ -151,6 +204,75 @@ impl Metrics {
     /// Snapshot of a gauge vector, e.g. `[3, 0, 1]`.
     fn gauge_vec(gauges: &[AtomicU64]) -> Vec<u64> {
         gauges.iter().map(|g| g.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Flat, name-addressed export of every metric — the registration
+    /// surface a scraper consumes. Names follow the machine-checked
+    /// convention (snake_case, unit-suffixed); `summary()`/`to_json()`
+    /// keep their legacy shapes for humans and the bench gate.
+    pub fn export(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        register_counter(&mut out, "requests_submitted_total", &self.submitted);
+        register_counter(&mut out, "requests_completed_total", &self.completed);
+        register_counter(&mut out, "requests_rejected_total", &self.rejected);
+        register_counter(&mut out, "batches_executed_total", &self.batches_executed);
+        register_counter(&mut out, "batched_requests_total", &self.batched_requests);
+        register_counter(&mut out, "padding_rows_total", &self.padding_rows);
+        register_counter(
+            &mut out,
+            "variant_direct_requests_total",
+            &self.variant_counts[0],
+        );
+        register_counter(
+            &mut out,
+            "variant_efficient_requests_total",
+            &self.variant_counts[1],
+        );
+        register_counter(
+            &mut out,
+            "variant_softmax_requests_total",
+            &self.variant_counts[2],
+        );
+        register_counter(&mut out, "streams_opened_total", &self.streams_opened);
+        register_counter(&mut out, "streams_closed_total", &self.streams_closed);
+        register_counter(&mut out, "decode_steps_total", &self.decode_steps);
+        register_counter(&mut out, "decode_misses_total", &self.decode_misses);
+        register_counter(&mut out, "promotions_total", &self.promotions);
+        register_counter(&mut out, "sessions_evicted_total", &self.sessions_evicted);
+        register_gauge(
+            &mut out,
+            "resident_sessions_total",
+            None,
+            self.sessions_resident.load(Ordering::Relaxed),
+        );
+        register_gauge(
+            &mut out,
+            "session_state_bytes",
+            None,
+            self.session_bytes.load(Ordering::Relaxed),
+        );
+        for (l, g) in self.layer_kv_sessions.iter().enumerate() {
+            register_gauge(
+                &mut out,
+                "layer_kv_sessions_total",
+                Some(l),
+                g.load(Ordering::Relaxed),
+            );
+        }
+        for (l, g) in self.layer_recurrent_sessions.iter().enumerate() {
+            register_gauge(
+                &mut out,
+                "layer_recurrent_sessions_total",
+                Some(l),
+                g.load(Ordering::Relaxed),
+            );
+        }
+        register_histogram(&mut out, "request_latency_us", &self.latency);
+        register_histogram(&mut out, "queue_wait_us", &self.queue_wait);
+        register_histogram(&mut out, "exec_time_us", &self.exec_time);
+        register_histogram(&mut out, "decode_latency_us", &self.decode_latency);
+        register_histogram(&mut out, "model_step_time_us", &self.model_step_time);
+        out
     }
 
     /// Human-readable summary block: one report covering the batch
@@ -359,6 +481,51 @@ mod tests {
         assert_eq!(layers.len(), 3);
         assert_eq!(layers[0].get("kv").and_then(|x| x.as_f64()), Some(2.0));
         assert_eq!(layers[2].get("recurrent").and_then(|x| x.as_f64()), Some(1.0));
+    }
+
+    fn exported_name_ok(name: &str) -> bool {
+        let snake = name.starts_with(|c: char| c.is_ascii_lowercase())
+            && name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+        let suffixed =
+            name.ends_with("_bytes") || name.ends_with("_us") || name.ends_with("_total");
+        snake && suffixed
+    }
+
+    #[test]
+    fn export_names_follow_convention() {
+        let m = Metrics::with_layers(2);
+        let samples = m.export();
+        assert!(!samples.is_empty());
+        for s in &samples {
+            assert!(
+                exported_name_ok(s.name),
+                "metric `{}` violates the naming convention",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn export_reports_counters_gauges_and_histograms() {
+        let m = Metrics::with_layers(2);
+        m.submitted.store(5, Ordering::Relaxed);
+        m.session_bytes.store(4096, Ordering::Relaxed);
+        m.layer_kv_sessions[1].store(3, Ordering::Relaxed);
+        m.decode_latency.record(Duration::from_micros(700));
+        let samples = m.export();
+        let find = |name: &str, stat: &str, layer: Option<usize>| {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.stat == stat && s.layer == layer)
+                .map(|s| s.value)
+        };
+        assert_eq!(find("requests_submitted_total", "", None), Some(5.0));
+        assert_eq!(find("session_state_bytes", "", None), Some(4096.0));
+        assert_eq!(find("layer_kv_sessions_total", "", Some(1)), Some(3.0));
+        assert_eq!(find("decode_latency_us", "count", None), Some(1.0));
+        assert!(find("decode_latency_us", "p99", None).unwrap_or(0.0) >= 512.0);
     }
 
     #[test]

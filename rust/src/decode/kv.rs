@@ -9,6 +9,7 @@
 //! stored raw.
 
 use crate::analysis::memory;
+use crate::util::numeric::guard_denom;
 
 /// Cached prefix for one attention head on the direct branch.
 #[derive(Clone, Debug)]
@@ -104,7 +105,7 @@ impl KvCache {
                 num[c] += w * val[c] as f64;
             }
         }
-        let rescale = (n as f64 / d as f64).sqrt() / den.max(1e-12);
+        let rescale = (n as f64 / d as f64).sqrt() / guard_denom(den);
         num.iter().map(|&x| (x * rescale) as f32).collect()
     }
 

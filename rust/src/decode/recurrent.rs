@@ -22,6 +22,7 @@
 //! lose the parity-with-recompute guarantee to summation error.
 
 use crate::analysis::memory;
+use crate::util::numeric::guard_denom;
 
 /// Running-moment state for one attention head on the efficient branch.
 #[derive(Clone, Debug)]
@@ -139,9 +140,10 @@ impl RecurrentState {
             }
         }
         // Per-token Taylor weights are ½(s+1)²+½ > 0 (scaled by α⁴), so
-        // the denominator is strictly positive.
-        let denom = y[0];
-        debug_assert!(denom > 0.0, "Taylor-softmax normalizer must be positive");
+        // the denominator is ≥ α⁴ in exact arithmetic and the guard is
+        // a numerical no-op — kept so release builds cannot divide by
+        // zero on degenerate state (mirrored in `causal.rs`).
+        let denom = guard_denom(y[0]);
         let rescale = (self.len as f64 / d as f64).sqrt();
         (0..d).map(|c| (y[c + 1] / denom * rescale) as f32).collect()
     }

@@ -238,7 +238,12 @@ impl SessionStore {
             let Some(victim) = victim else {
                 break; // only the protected session remains
             };
-            let gone = self.sessions.remove(&victim).expect("victim resident");
+            // The victim id was taken from `sessions` under `&mut self`,
+            // so the remove can only miss if that invariant broke — stop
+            // evicting rather than panic mid-request.
+            let Some(gone) = self.sessions.remove(&victim) else {
+                break;
+            };
             self.resident_bytes -= gone.bytes;
             self.record_eviction(victim);
             evicted.push(victim);

@@ -126,6 +126,7 @@ impl Json {
         let mut p = Parser {
             bytes: input.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -227,9 +228,15 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting bound: malformed (or adversarial) deeply-nested input must
+/// come back as a `JsonError`, not blow the stack — the parser feeds on
+/// external config/manifest/metrics files.
+const MAX_DEPTH: usize = 256;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -269,16 +276,22 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let result = match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'"') => self.string().map(Json::Str),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("expected a value")),
-        }
+        };
+        self.depth -= 1;
+        result
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
@@ -361,6 +374,11 @@ impl<'a> Parser<'a> {
                                 if self.bytes[self.pos..].starts_with(b"\\u") {
                                     self.pos += 2;
                                     let low = self.hex4()?;
+                                    // A non-low-surrogate here must error:
+                                    // `low - 0xDC00` would underflow.
+                                    if !(0xDC00..0xE000).contains(&low) {
+                                        return Err(self.err("bad surrogate pair"));
+                                    }
                                     let combined = 0x10000
                                         + (((code - 0xD800) as u32) << 10)
                                         + (low - 0xDC00) as u32;
@@ -384,7 +402,7 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 char.
                     let rest = &self.bytes[self.pos..];
                     let text = std::str::from_utf8(rest).map_err(|_| self.err("bad utf-8"))?;
-                    let c = text.chars().next().unwrap();
+                    let c = text.chars().next().ok_or_else(|| self.err("bad utf-8"))?;
                     s.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -426,7 +444,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -469,6 +488,56 @@ mod tests {
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        // Every case here previously either panicked, could panic on a
+        // debug-mode overflow (lone/bad surrogate pairs), or relied on
+        // an internal unwrap — all must surface as `JsonError` now.
+        for bad in [
+            "",
+            "{",
+            "}",
+            "[",
+            "]",
+            "{\"a\"}",
+            "{\"a\":}",
+            "{:1}",
+            "[1 2]",
+            "[,]",
+            "{\"k\":1,}",
+            "\"\\q\"",
+            "\"\\u12\"",
+            "\"\\ud800\"",
+            // High surrogate followed by a non-low-surrogate escape:
+            // the pair combiner must reject it, not underflow.
+            "\"\\ud800\\u0041\"",
+            "\"\\ud800\\ud801\"",
+            "-",
+            "+1",
+            "0x10",
+            "tru",
+            "nulll",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must fail to parse");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_stack_overflowed() {
+        let deep = "[".repeat(5000) + &"]".repeat(5000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.message.contains("deep"), "got: {}", err.message);
+        // Reasonable nesting still parses.
+        let ok = "[".repeat(100) + "1" + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn valid_surrogate_pairs_still_decode() {
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
     }
 
     #[test]

@@ -1,0 +1,60 @@
+//! Shared numeric guards for the Taylor-softmax normalization.
+//!
+//! The paper's normalization scheme (Section 3.3) keeps every
+//! denominator strictly positive in exact arithmetic — the per-token
+//! Taylor weight is `1 + s + s²/2 = ½(s+1)² + ½ > 0` — but the serving
+//! path must not rely on a `debug_assert!` that compiles out in
+//! release builds. Every division by a moment/sum goes through
+//! [`guard_denom`] (or carries an explicit `// lint: allow` hatch),
+//! which taylor-lint rule R2 enforces across `attention/`, `decode/`,
+//! and `model/`.
+
+/// Smallest denominator magnitude admitted into a normalization
+/// division. Matches the `‖·‖.max(1e-12)` guard used for the q/k row
+/// norms, so guarded and unguarded-in-exact-arithmetic paths round
+/// identically whenever the denominator is healthy.
+pub const DENOM_EPS: f64 = 1e-12;
+
+/// Clamp an f64 normalizer away from zero before dividing.
+///
+/// A no-op for every healthy Taylor-softmax denominator (they are
+/// ≥ α⁴ ≥ 1 by construction), so adding the guard cannot perturb the
+/// streaming-vs-batch bit-exactness invariant.
+#[inline]
+pub fn guard_denom(x: f64) -> f64 {
+    x.max(DENOM_EPS)
+}
+
+/// f32 counterpart of [`guard_denom`] for single-precision paths.
+#[inline]
+pub fn guard_denom_f32(x: f32) -> f32 {
+    x.max(DENOM_EPS as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_denominators_pass_through_unchanged() {
+        for x in [1.0f64, 16.0, 1e-6, 123.456] {
+            assert_eq!(guard_denom(x), x);
+        }
+        assert_eq!(guard_denom_f32(2.5), 2.5);
+    }
+
+    #[test]
+    fn degenerate_denominators_are_clamped() {
+        assert_eq!(guard_denom(0.0), DENOM_EPS);
+        assert_eq!(guard_denom(-1.0), DENOM_EPS);
+        assert_eq!(guard_denom(f64::NEG_INFINITY), DENOM_EPS);
+        assert_eq!(guard_denom_f32(0.0), DENOM_EPS as f32);
+        assert!(guard_denom(1e-13) == DENOM_EPS);
+    }
+
+    #[test]
+    fn division_through_guard_is_finite() {
+        let y = 1.0 / guard_denom(0.0);
+        assert!(y.is_finite());
+    }
+}

@@ -124,6 +124,7 @@ fn worker_loop(
     loop {
         let msg = {
             let guard = rx.lock().expect("pool receiver poisoned");
+            // lint: allow(lock-across-channel) -- the Mutex exists only to hand the single consumer end to one idle worker at a time; blocking recv under it IS the handoff protocol, and the guard drops before the job runs
             guard.recv()
         };
         match msg {
