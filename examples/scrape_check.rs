@@ -1,0 +1,90 @@
+//! Scrape self-check: drive a small prefill + streaming-decode load,
+//! render the Prometheus exposition via `Engine::scrape()`, and fail
+//! (non-zero exit) unless it round-trips through the strict validator
+//! with the per-layer and per-branch series present. CI runs this and
+//! uploads the exposition next to the bench JSON artifacts.
+//!
+//! Run: `cargo run --release --example scrape_check -- --out SCRAPE_sample.txt`
+//! Flags: --out PATH (write the exposition there) --decode-tokens T
+
+use taylorshift::attention::selector::Selector;
+use taylorshift::coordinator::engine::{BatchExecutor, Engine, EngineConfig};
+use taylorshift::coordinator::router::Route;
+use taylorshift::obs::prometheus::validate_exposition;
+use taylorshift::tensor::Tensor;
+use taylorshift::util::cli::Args;
+
+/// Prefill stand-in so the check runs without compiled artifacts.
+struct NullPrefill;
+
+impl BatchExecutor for NullPrefill {
+    fn execute(&mut self, _route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(tokens.iter().map(|_| vec![0.0; 10]).collect())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &[1, 8]
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let decode_tokens = args.usize_or("decode-tokens", 24);
+
+    let cfg = EngineConfig {
+        // Calibrated crossover at N₀ = 8 so the stream below exercises
+        // both decode branches and the promotion inside one short run.
+        selector: Selector::calibrated(vec![(16, 8.0)]),
+        ..EngineConfig::default()
+    };
+    let d_model = cfg.decode.heads * cfg.head_dim;
+    let engine = Engine::start_with(cfg, || Ok(NullPrefill))?;
+
+    // A little prefill traffic (batcher + exec spans)...
+    for i in 0..12u64 {
+        let len = 64 + (i as usize % 3) * 100;
+        let tokens: Vec<i32> = (0..len as i32).collect();
+        engine.infer(tokens).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    // ...and one stream across the crossover (KV, promote, recurrent).
+    let sid = engine.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    for t in 0..decode_tokens {
+        let token = Tensor::randn(&[1, d_model], 77 + t as u64);
+        engine
+            .decode_step(sid, token)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    engine.close_stream(sid).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let text = engine.scrape();
+    let stats = validate_exposition(&text)
+        .map_err(|e| anyhow::anyhow!("exposition failed validation: {e}"))?;
+    println!(
+        "exposition OK: {} TYPE families, {} series, {} histogram groups",
+        stats.types, stats.series, stats.histograms
+    );
+
+    // The series the dashboards depend on must actually be present.
+    for needle in [
+        "taylorshift_requests_completed_total",
+        "taylorshift_decode_steps_total",
+        "taylorshift_batch_occupancy_total",
+        "taylorshift_decode_lane_depth_total",
+        "taylorshift_span_time_us_bucket",
+        "span=\"engine.exec_batch\"",
+        "layer=\"0\"",
+        "layer=\"1\"",
+        "branch=\"kv\"",
+        "branch=\"recurrent\"",
+    ] {
+        if !text.contains(needle) {
+            anyhow::bail!("exposition is missing expected series `{needle}`");
+        }
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &text)?;
+        println!("wrote exposition sample to {path}");
+    }
+    Ok(())
+}

@@ -12,9 +12,15 @@
 //! the O(1) recurrent state when its prefix crosses N₀ — the crossover
 //! applied at decode time, per layer.
 //!
+//! The engine is observable while it runs: every 256 decode steps a
+//! scrape snapshot (selected Prometheus series from `Engine::scrape`)
+//! is printed, `--scrape-out PATH` writes the full exposition at the
+//! end, and an induced session eviction at the end shows the
+//! flight-recorder dump that accompanies every typed engine error.
+//!
 //! Run: `cargo run --release --example serve_longseq -- --requests 200`
 //! Flags: --requests N --concurrency C --variant auto|direct|efficient
-//!        --max-delay-ms D --decode-tokens T --seed S
+//!        --max-delay-ms D --decode-tokens T --seed S --scrape-out PATH
 
 use std::time::{Duration, Instant};
 use taylorshift::coordinator::batcher::BatchPolicy;
@@ -152,6 +158,20 @@ fn main() -> anyhow::Result<()> {
                 resp.step
             );
         }
+        // Periodic scrape snapshot: the serving counters a dashboard
+        // would poll, straight from the Prometheus exposition.
+        if (t + 1) % 256 == 0 {
+            let scrape = engine.scrape();
+            println!("  scrape @ step {}:", t + 1);
+            for line in scrape.lines() {
+                if line.starts_with("taylorshift_decode_steps_total")
+                    || line.starts_with("taylorshift_decode_lane_depth_total")
+                    || line.contains("decode_branch_step_time_us_count")
+                {
+                    println!("    {line}");
+                }
+            }
+        }
     }
     let decode_wall = t0.elapsed().as_secs_f64();
     let stats = engine
@@ -168,6 +188,45 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n{}", engine.metrics().summary());
+
+    // Full exposition on request — point Prometheus' file discovery at
+    // it, or diff scrapes across runs.
+    if let Some(path) = args.get("scrape-out") {
+        std::fs::write(path, engine.scrape())?;
+        println!("wrote Prometheus exposition to {path}");
+    }
+
+    // --- flight recorder: what the engine keeps for the post-mortem ---
+    // Induce the error path on a throwaway engine: a 1-session store
+    // must evict the first stream when a second opens, so stepping the
+    // first again fails with NeedsReprefill — and the engine snapshots
+    // the ring events leading up to the error.
+    println!("\ninducing a session eviction to demo the flight recorder...");
+    let tiny = Engine::start_with(
+        EngineConfig {
+            decode: taylorshift::decode::DecodeConfig {
+                max_sessions: 1,
+                ..Default::default()
+            },
+            ..EngineConfig::default()
+        },
+        || Ok(NullPrefill { sizes: vec![1, 8] }),
+    )?;
+    let victim = tiny.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let token = Tensor::randn(&[1, d_model], seed);
+    tiny.decode_step(victim, token.clone())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let _survivor = tiny.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    match tiny.decode_step(victim, token) {
+        Ok(_) => println!("  (eviction did not trigger — budget too large?)"),
+        Err(e) => {
+            println!("  typed error as expected: {e}");
+            if let Some(dump) = tiny.last_error_dump() {
+                println!("  flight-recorder dump:\n{dump}");
+            }
+        }
+    }
+
     println!(
         "\nadaptive crossover N0(16)≈{:.0}: buckets ≤256 → direct, ≥512 → efficient",
         taylorshift::attention::selector::Selector::analytical().crossover(16)

@@ -1,0 +1,16 @@
+// Fixture: R6 must flag blocking sync primitives anywhere in the
+// observability layer.
+
+use std::sync::Mutex;
+
+pub struct Collector {
+    counts: Mutex<[u64; 32]>,
+}
+
+impl Collector {
+    pub fn observe(&self, bucket: usize) {
+        if let Ok(mut c) = self.counts.lock() {
+            c[bucket.min(31)] += 1;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture: R6 must flag allocation on the span hot path — the span
+// API runs inside every decode step.
+
+pub struct SpanGuard {
+    name: String,
+}
+
+pub fn span(name: &str) -> SpanGuard {
+    SpanGuard {
+        name: name.to_string(),
+    }
+}
+
+pub fn drain(names: &[&str]) -> Vec<SpanGuard> {
+    names.iter().map(|n| span(n)).collect()
+}

@@ -1,0 +1,21 @@
+// Fixture: atomics-only aggregation is R6-clean, and registered metric
+// names under obs/ satisfy R5's naming scheme.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Collector {
+    buckets: [AtomicU64; 4],
+}
+
+impl Collector {
+    pub fn observe(&self, bucket: usize) {
+        if let Some(b) = self.buckets.get(bucket) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+pub fn export(reg: &mut crate::Registry, c: &Collector) {
+    reg.register_counter("spans_recorded_total", c.buckets[0].load(Ordering::Relaxed) as f64);
+    reg.register_gauge_f("span_time_us", 2.0);
+}

@@ -1,0 +1,30 @@
+// Fixture: a lock-free, allocation-free span timer satisfies R6 —
+// fixed-size thread-local buffer, atomics only.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+pub struct SpanGuard {
+    start_us: u64,
+    armed: bool,
+}
+
+pub fn span(start_us: u64) -> SpanGuard {
+    let armed = DEPTH.try_with(|d| d.get() < 8).unwrap_or(false);
+    if !armed {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+    SpanGuard { start_us, armed }
+}
+
+impl SpanGuard {
+    pub fn is_armed(&self) -> bool {
+        self.armed && self.start_us > 0
+    }
+}

@@ -1,4 +1,4 @@
-//! The five taylor-lint rules, the escape-hatch grammar, and
+//! The six taylor-lint rules, the escape-hatch grammar, and
 //! suppression.
 //!
 //! Rules are scoped by relative path (so fixtures exercise them by
@@ -13,8 +13,13 @@
 //! - **R4 lock-across-channel** (`coordinator/`, `util/threadpool.rs`):
 //!   a Mutex/RwLock guard must not stay live across channel ops or
 //!   compute calls.
-//! - **R5 metric-name** (`coordinator/metrics.rs`): registered metric
-//!   names must be snake_case with a `_bytes`/`_us`/`_total` suffix.
+//! - **R5 metric-name** (`coordinator/metrics.rs`, `obs/`): registered
+//!   metric names must be snake_case with a `_bytes`/`_us`/`_total`
+//!   suffix.
+//! - **R6 obs-hot-path** (`obs/`): no blocking sync primitives
+//!   (Mutex/RwLock/Condvar) anywhere in the observability layer, and no
+//!   allocation (`Vec`/`String`/`Box`, `vec!`/`format!`, `.to_string()`
+//!   etc.) in `obs/span.rs` — the span API sits on the decode hot path.
 //!
 //! Escape hatch: `// lint: allow(<slug>) -- <reason>` on the finding's
 //! line or the line above. A hatch with a missing/short reason or an
@@ -23,7 +28,7 @@
 use crate::lexer::{lex, Comment, Kind, Tok};
 use std::collections::{HashMap, HashSet};
 
-/// One lint finding. `rule` is the rule ID (`R1`..`R5`, `HATCH`).
+/// One lint finding. `rule` is the rule ID (`R1`..`R6`, `HATCH`).
 #[derive(Clone, Debug)]
 pub struct Finding {
     pub rule: &'static str,
@@ -40,16 +45,18 @@ pub fn slug_for(rule: &str) -> Option<&'static str> {
         "R3" => Some("panic"),
         "R4" => Some("lock-across-channel"),
         "R5" => Some("metric-name"),
+        "R6" => Some("obs-hot-path"),
         _ => None,
     }
 }
 
-const KNOWN_SLUGS: [&str; 5] = [
+const KNOWN_SLUGS: [&str; 6] = [
     "f32-accum",
     "unguarded-div",
     "panic",
     "lock-across-channel",
     "metric-name",
+    "obs-hot-path",
 ];
 
 const DENOM_NAMES: [&str; 6] = ["den", "denom", "sum", "total", "norm", "z"];
@@ -81,7 +88,11 @@ fn r4_scope(rel: &str) -> bool {
 }
 
 fn r5_scope(rel: &str) -> bool {
-    is_file(rel, "coordinator/metrics.rs")
+    is_file(rel, "coordinator/metrics.rs") || in_dir(rel, "obs")
+}
+
+fn r6_scope(rel: &str) -> bool {
+    in_dir(rel, "obs")
 }
 
 // ------------------------------------------------------- token helpers
@@ -505,7 +516,8 @@ fn metric_name_ok(name: &str) -> bool {
 }
 
 /// R5: metric names passed to `register_counter`/`register_gauge`/
-/// `register_histogram` must be snake_case with a unit suffix.
+/// `register_gauge_f`/`register_histogram` must be snake_case with a
+/// unit suffix.
 fn rule_r5(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
     if !r5_scope(rel) {
         return;
@@ -516,6 +528,7 @@ fn rule_r5(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
         }
         if t.text != "register_counter"
             && t.text != "register_gauge"
+            && t.text != "register_gauge_f"
             && t.text != "register_histogram"
         {
             continue;
@@ -543,6 +556,77 @@ fn rule_r5(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
                 message: format!(
                     "metric name `{name}` must be snake_case with a unit suffix \
                      (_bytes, _us, _total)"
+                ),
+            });
+        }
+    }
+}
+
+const R6_LOCK_TYPES: [&str; 3] = ["Mutex", "RwLock", "Condvar"];
+const R6_ALLOC_TYPES: [&str; 3] = ["Vec", "String", "Box"];
+const R6_ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+const R6_ALLOC_METHODS: [&str; 3] = ["to_string", "to_owned", "collect"];
+
+/// R6: the observability layer must stay lock-free — no blocking sync
+/// primitives anywhere under `obs/` — and the span API (`obs/span.rs`)
+/// must additionally be allocation-free, because every decode step
+/// opens spans on the hot path.
+fn rule_r6(rel: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !r6_scope(rel) {
+        return;
+    }
+    let span_file = is_file(rel, "obs/span.rs");
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let txt = t.text.as_str();
+        let nxt = toks.get(i + 1).map_or("", |x| x.text.as_str());
+        if R6_LOCK_TYPES.contains(&txt) {
+            findings.push(Finding {
+                rule: "R6",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{txt}` in the observability layer; obs/ must stay lock-free \
+                     (atomics and thread-locals only)"
+                ),
+            });
+            continue;
+        }
+        if !span_file {
+            continue;
+        }
+        if R6_ALLOC_TYPES.contains(&txt) {
+            findings.push(Finding {
+                rule: "R6",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{txt}` in obs/span.rs; the span hot path must not allocate \
+                     (use fixed-size buffers)"
+                ),
+            });
+        } else if R6_ALLOC_MACROS.contains(&txt) && nxt == "!" {
+            findings.push(Finding {
+                rule: "R6",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{txt}!` in obs/span.rs; the span hot path must not allocate"
+                ),
+            });
+        } else if R6_ALLOC_METHODS.contains(&txt)
+            && i > 0
+            && toks[i - 1].text == "."
+            && nxt == "("
+        {
+            findings.push(Finding {
+                rule: "R6",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "`.{txt}()` in obs/span.rs; the span hot path must not allocate"
                 ),
             });
         }
@@ -627,12 +711,13 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     rule_r3(rel, &toks, &mut pre);
     rule_r4(rel, &toks, &mut pre);
     rule_r5(rel, &toks, &mut pre);
+    rule_r6(rel, &toks, &mut pre);
     pre.retain(|f| !skip.contains(&f.line));
     let non_test: Vec<&Comment> = comments.iter().filter(|c| !skip.contains(&c.0)).collect();
     rule_hatch(rel, &non_test, &mut pre);
 
     // Suppression: an `allow(<slug>)` comment on the finding's line or
-    // the line above silences R1–R5 (never HATCH).
+    // the line above silences R1–R6 (never HATCH).
     let mut by_line: HashMap<usize, &str> = HashMap::new();
     for (ln, txt) in &comments {
         by_line.insert(*ln, txt.as_str());
@@ -698,6 +783,35 @@ mod tests {
         let found = lint_source("coordinator/metrics.rs", src);
         assert_eq!(rules_of(&found), ["R5"]);
         assert!(found[0].message.contains("BadName"));
+    }
+
+    #[test]
+    fn r5_also_covers_obs_and_register_gauge_f() {
+        let src = "fn render(e: &mut E) {\n    e.register_gauge_f(\"BadName\", 1.0);\n}\n";
+        assert_eq!(rules_of(&lint_source("obs/prometheus.rs", src)), ["R5"]);
+        let ok = "fn render(e: &mut E) {\n    e.register_gauge_f(\"good_total\", 1.0);\n}\n";
+        assert!(lint_source("obs/prometheus.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r6_flags_locks_anywhere_in_obs() {
+        let src = "use std::sync::Mutex;\nfn f() {\n    let m = Mutex::new(0);\n    let _ = m;\n}\n";
+        let found = lint_source("obs/collector.rs", src);
+        assert_eq!(rules_of(&found), ["R6", "R6"]);
+        assert!(lint_source("util/a.rs", src).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn r6_flags_allocation_only_in_span_file() {
+        let src = "fn f() -> String {\n    let v = vec![1, 2];\n    format!(\"{}\", v.len())\n}\n";
+        let found = lint_source("obs/span.rs", src);
+        assert_eq!(rules_of(&found), ["R6", "R6", "R6"]);
+        assert!(
+            lint_source("obs/recorder.rs", src).is_empty(),
+            "alloc is allowed off the span hot path"
+        );
+        let m = "fn f(x: &str) {\n    let _ = x.to_string();\n}\n";
+        assert_eq!(rules_of(&lint_source("obs/span.rs", m)), ["R6"]);
     }
 
     #[test]

@@ -25,7 +25,7 @@ fn render(findings: &[Finding]) -> String {
 fn bad_fixtures_fire_every_rule() {
     let findings = run_on("bad");
     let rules: HashSet<&str> = findings.iter().map(|f| f.rule).collect();
-    for rule in ["R1", "R2", "R3", "R4", "R5", "HATCH"] {
+    for rule in ["R1", "R2", "R3", "R4", "R5", "R6", "HATCH"] {
         assert!(
             rules.contains(rule),
             "rule {rule} produced no finding on fixtures/bad; got:\n{}",
@@ -56,6 +56,8 @@ fn each_rule_anchors_to_its_fixture_file() {
     assert!(fired(&findings, "R3", "decode/r3_panics.rs"));
     assert!(fired(&findings, "R4", "coordinator/r4_lock_across_channel.rs"));
     assert!(fired(&findings, "R5", "coordinator/metrics.rs"));
+    assert!(fired(&findings, "R6", "obs/r6_locked_collector.rs"));
+    assert!(fired(&findings, "R6", "obs/span.rs"));
     assert!(fired(&findings, "HATCH", "decode/hatch_malformed.rs"));
 }
 

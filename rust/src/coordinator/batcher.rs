@@ -98,6 +98,12 @@ impl DynamicBatcher {
         if queue.items.is_empty() {
             queue.oldest = Some(now);
         }
+        crate::obs::recorder::record_event(
+            crate::obs::recorder::EventKind::Enqueue,
+            request.trace,
+            route.bucket as u64,
+            queue.items.len() as u64 + 1,
+        );
         queue.items.push((request, responder));
         self.pending_total += 1;
         if queue.items.len() >= self.policy.max_batch {
@@ -153,6 +159,12 @@ impl DynamicBatcher {
 
     fn drain_queue(queue: &mut Queue, max: usize) -> PendingBatch {
         let take = queue.items.len().min(max);
+        crate::obs::recorder::record_event(
+            crate::obs::recorder::EventKind::BatchSeal,
+            0,
+            take as u64,
+            queue.route.bucket as u64,
+        );
         let requests: Vec<_> = queue.items.drain(..take).collect();
         queue.oldest = if queue.items.is_empty() {
             None

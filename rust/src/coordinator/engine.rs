@@ -30,11 +30,66 @@ use crate::coordinator::router::{Route, Router};
 use crate::data::batch::Buckets;
 use crate::decode::DecodeConfig;
 use crate::model::{SessionStore, StepMiss};
+use crate::obs::recorder::{self, EventKind};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Events included in an automatic flight-recorder dump.
+const DUMP_EVENTS: usize = 64;
+
+/// The last engine-surfaced typed error, kept as plain atomics so
+/// recording never takes a lock on the serving path (lint rule R4
+/// keeps this file Mutex-free). `seq` doubles as the presence flag
+/// (0 = no error yet) and as the flight-recorder boundary, so the
+/// dump shows only events up to the error.
+#[derive(Default)]
+struct LastError {
+    /// Ring sequence number of the error event (0 = none yet).
+    seq: AtomicU64,
+    /// Error code (`obs::recorder::ERR_*`).
+    code: AtomicU64,
+    /// Trace ID of the failing request (0 when unknown).
+    trace: AtomicU64,
+    /// Subject id: decode session, or bucket for batch failures.
+    subject: AtomicU64,
+}
+
+impl LastError {
+    fn record(&self, code: u64, trace: u64, subject: u64) {
+        let seq = recorder::record_error(code, trace, subject);
+        self.code.store(code, Ordering::Relaxed);
+        self.trace.store(trace, Ordering::Relaxed);
+        self.subject.store(subject, Ordering::Relaxed);
+        self.seq.store(seq, Ordering::Release);
+    }
+
+    fn dump(&self) -> Option<String> {
+        let seq = self.seq.load(Ordering::Acquire);
+        if seq == 0 {
+            return None;
+        }
+        let code = self.code.load(Ordering::Relaxed);
+        let json = Json::from_pairs(vec![
+            (
+                "error",
+                Json::Str(recorder::error_code_label(code).to_string()),
+            ),
+            ("code", Json::Num(code as f64)),
+            ("trace", Json::Num(self.trace.load(Ordering::Relaxed) as f64)),
+            (
+                "subject",
+                Json::Num(self.subject.load(Ordering::Relaxed) as f64),
+            ),
+            ("seq", Json::Num(seq as f64)),
+            ("events", recorder::dump_json(DUMP_EVENTS, seq)),
+        ]);
+        Some(json.to_string())
+    }
+}
 
 /// Engine-internal failures. Surfaced to waiting requests as
 /// [`RequestError::ExecFailed`] and to constructors as `anyhow` errors —
@@ -130,6 +185,7 @@ pub struct Engine {
     next_stream: AtomicU64,
     /// Expected decode token shape, `[1, d_model]`.
     decode_shape: [usize; 2],
+    last_error: Arc<LastError>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -144,9 +200,11 @@ impl Engine {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::with_layers(config.decode.n_layers));
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let last_error = Arc::new(LastError::default());
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let thread_metrics = Arc::clone(&metrics);
         let thread_in_flight = Arc::clone(&in_flight);
+        let thread_last_error = Arc::clone(&last_error);
         let cfg = config.clone();
         let worker = std::thread::Builder::new()
             .name("ts-engine".into())
@@ -161,7 +219,14 @@ impl Engine {
                         return;
                     }
                 };
-                engine_loop(cfg, executor, rx, thread_metrics, thread_in_flight);
+                engine_loop(
+                    cfg,
+                    executor,
+                    rx,
+                    thread_metrics,
+                    thread_in_flight,
+                    thread_last_error,
+                );
             })?;
         ready_rx
             .recv()
@@ -175,6 +240,7 @@ impl Engine {
             next_id: AtomicU64::new(1),
             next_stream: AtomicU64::new(1),
             decode_shape: [1, config.decode.heads * config.head_dim],
+            last_error,
             worker: Some(worker),
         })
     }
@@ -264,6 +330,26 @@ impl Engine {
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Relaxed)
     }
+
+    /// Prometheus text exposition: every exported counter and gauge,
+    /// native histogram series, per-phase span timings, per-layer and
+    /// per-branch decode step timing (see `obs::prometheus`).
+    pub fn scrape(&self) -> String {
+        crate::obs::prometheus::render(&self.metrics)
+    }
+
+    /// JSON dump of the whole flight-recorder ring (resident events,
+    /// oldest first).
+    pub fn flight_recorder_json(&self) -> String {
+        recorder::dump_json(0, 0).to_string()
+    }
+
+    /// If the engine has surfaced a typed error, a JSON dump of it
+    /// plus the flight-recorder events leading up to it. `None` until
+    /// the first error.
+    pub fn last_error_dump(&self) -> Option<String> {
+        self.last_error.dump()
+    }
 }
 
 impl Drop for Engine {
@@ -284,6 +370,7 @@ fn engine_loop<E: BatchExecutor>(
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
     in_flight: Arc<AtomicUsize>,
+    last_error: Arc<LastError>,
 ) {
     let mut router = Router::new(
         Buckets::new(config.buckets.clone()),
@@ -338,7 +425,14 @@ fn engine_loop<E: BatchExecutor>(
                         waiters.insert(id, responder);
                         let ready = batcher.push(route, req, id, Instant::now());
                         for batch in ready {
-                            run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+                            run_batch(
+                                &mut executor,
+                                batch,
+                                &mut waiters,
+                                &metrics,
+                                &in_flight,
+                                &last_error,
+                            );
                         }
                     }
                     Err(e) => {
@@ -356,7 +450,19 @@ fn engine_loop<E: BatchExecutor>(
                     update_session_gauges(&store, &metrics);
                     let _ = responder.send(Ok(id));
                 }
-                Msg::Decode(req, responder) => lane.push((req, responder)),
+                Msg::Decode(req, responder) => {
+                    let trace = store.trace_of(req.session).unwrap_or(0);
+                    recorder::record_event(
+                        EventKind::Enqueue,
+                        trace,
+                        req.session,
+                        lane.pending() as u64 + 1,
+                    );
+                    lane.push((req, responder));
+                    metrics
+                        .decode_lane_depth
+                        .store(lane.pending() as u64, Ordering::Relaxed);
+                }
                 Msg::StreamClose(id, responder) => {
                     let result = match store.close(id) {
                         Some(s) => {
@@ -367,6 +473,7 @@ fn engine_loop<E: BatchExecutor>(
                                 branches: s.branches,
                                 bytes: s.bytes,
                                 promoted_at: s.promoted_at,
+                                trace: s.trace,
                             })
                         }
                         None => Err(RequestError::UnknownSession { id }),
@@ -380,22 +487,41 @@ fn engine_loop<E: BatchExecutor>(
         // Decode steps run ahead of due batches, bounded per cycle so a
         // decode burst cannot starve prefill.
         for (req, responder) in lane.drain_cycle() {
-            run_decode(&mut store, req, responder, &metrics);
+            run_decode(&mut store, req, responder, &metrics, &last_error);
+            metrics
+                .decode_lane_depth
+                .store(lane.pending() as u64, Ordering::Relaxed);
         }
         for batch in batcher.flush_due(Instant::now()) {
-            run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+            run_batch(
+                &mut executor,
+                batch,
+                &mut waiters,
+                &metrics,
+                &in_flight,
+                &last_error,
+            );
         }
     }
     // Drain on shutdown: execute what's queued so no request hangs.
     for (req, responder) in lane.drain_all() {
-        run_decode(&mut store, req, responder, &metrics);
+        run_decode(&mut store, req, responder, &metrics, &last_error);
     }
+    metrics.decode_lane_depth.store(0, Ordering::Relaxed);
     for batch in batcher.flush_all() {
-        run_batch(&mut executor, batch, &mut waiters, &metrics, &in_flight);
+        run_batch(
+            &mut executor,
+            batch,
+            &mut waiters,
+            &metrics,
+            &in_flight,
+            &last_error,
+        );
     }
     for (_, responder) in waiters.drain() {
         let _ = responder.send(Err(RequestError::Shutdown));
     }
+    crate::obs::flush();
 }
 
 fn update_session_gauges(store: &SessionStore, metrics: &Metrics) {
@@ -420,7 +546,14 @@ fn run_decode(
     req: DecodeRequest,
     responder: DecodeResponder,
     metrics: &Metrics,
+    last_error: &LastError,
 ) {
+    // Install the stream's trace ID for every span recorded below
+    // (decode branch spans, per-layer block spans) — one trace per
+    // stream, threaded end-to-end.
+    let trace = store.trace_of(req.session).unwrap_or(0);
+    let _trace_guard = crate::obs::trace_scope(trace);
+    crate::obs::observe("lane.queue_wait", req.enqueued_at.elapsed(), trace);
     // Metrics/gauges are updated BEFORE the response is sent so a
     // blocking caller observes a consistent snapshot on return.
     let t_step = Instant::now();
@@ -438,9 +571,13 @@ fn run_decode(
             metrics
                 .sessions_evicted
                 .fetch_add(outcome.evicted.len() as u64, Ordering::Relaxed);
+            if promoted_layers > 0 {
+                recorder::record_event(EventKind::Promote, trace, req.session, promoted_layers);
+            }
             let latency = req.enqueued_at.elapsed();
             metrics.decode_latency.record(latency);
             update_session_gauges(store, metrics);
+            crate::obs::flush();
             let _ = responder.send(Ok(DecodeResponse {
                 session: req.session,
                 step: outcome.result.len,
@@ -448,15 +585,22 @@ fn run_decode(
                 promoted: promoted_layers > 0,
                 layers: outcome.result.layers,
                 latency,
+                trace,
             }));
         }
         Err(miss) => {
             metrics.decode_misses.fetch_add(1, Ordering::Relaxed);
             update_session_gauges(store, metrics);
+            let code = match miss {
+                StepMiss::Evicted => recorder::ERR_NEEDS_REPREFILL,
+                StepMiss::Unknown => recorder::ERR_UNKNOWN_SESSION,
+            };
+            last_error.record(code, trace, req.session);
             let err = match miss {
                 StepMiss::Evicted => RequestError::NeedsReprefill { id: req.session },
                 StepMiss::Unknown => RequestError::UnknownSession { id: req.session },
             };
+            crate::obs::flush();
             let _ = responder.send(Err(err));
         }
     }
@@ -480,6 +624,7 @@ fn run_batch<E: BatchExecutor>(
     waiters: &mut std::collections::HashMap<u64, Responder>,
     metrics: &Metrics,
     in_flight: &AtomicUsize,
+    last_error: &LastError,
 ) {
     let k = batch.requests.len();
     debug_assert!(k > 0);
@@ -489,6 +634,9 @@ fn run_batch<E: BatchExecutor>(
         Err(e) => {
             // A misconfigured executor fails every waiter with a typed
             // error instead of panicking the engine thread.
+            let trace0 = batch.requests.first().map(|(r, _)| r.trace).unwrap_or(0);
+            last_error.record(recorder::ERR_EXEC_FAILED, trace0, route.bucket as u64);
+            crate::obs::flush();
             let msg = e.to_string();
             for (_, responder_id) in batch.requests {
                 in_flight.fetch_sub(1, Ordering::Relaxed);
@@ -518,7 +666,14 @@ fn run_batch<E: BatchExecutor>(
         .fetch_add((exec_b - k) as u64, Ordering::Relaxed);
 
     let t_exec = Instant::now();
+    // A batch carries many traces; the span is attributed to the first
+    // request's trace (enough to find the batch in the recorder).
+    let trace0 = batch.requests.first().map(|(r, _)| r.trace).unwrap_or(0);
+    let exec_guard = crate::obs::trace_scope(trace0);
+    let exec_span = crate::obs::span("engine.exec_batch");
     let result = executor.execute(route, &tokens);
+    drop(exec_span);
+    drop(exec_guard);
     let exec_time = t_exec.elapsed();
     metrics.exec_time.record(exec_time);
     metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
@@ -534,10 +689,16 @@ fn run_batch<E: BatchExecutor>(
                 metrics
                     .queue_wait
                     .record(latency.saturating_sub(exec_time));
+                crate::obs::observe(
+                    "batcher.queue_wait",
+                    latency.saturating_sub(exec_time),
+                    req.trace,
+                );
                 metrics.record_variant(route.variant);
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 in_flight.fetch_sub(1, Ordering::Relaxed);
                 if let Some(responder) = waiters.remove(&responder_id) {
+                    crate::obs::flush();
                     let _ = responder.send(Ok(InferResponse {
                         id: req.id,
                         logits: logits_rows.get(i).cloned().unwrap_or_default(),
@@ -550,6 +711,8 @@ fn run_batch<E: BatchExecutor>(
             }
         }
         Err(e) => {
+            last_error.record(recorder::ERR_EXEC_FAILED, trace0, route.bucket as u64);
+            crate::obs::flush();
             for (_, responder_id) in batch.requests {
                 in_flight.fetch_sub(1, Ordering::Relaxed);
                 if let Some(responder) = waiters.remove(&responder_id) {

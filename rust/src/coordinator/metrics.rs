@@ -49,23 +49,55 @@ impl LatencyHistogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
     }
 
-    /// Approximate quantile from the log₂ buckets (upper bound of the
-    /// bucket containing the q-quantile).
+    /// Approximate quantile from the log₂ buckets, linearly
+    /// interpolated by rank within the winning bucket. (Returning the
+    /// bucket's upper bound, as this used to, overestimates p50/p99
+    /// by up to 2× whenever the quantile rank falls early in a
+    /// well-populated bucket.)
     pub fn quantile(&self, q: f64) -> Duration {
         let n = self.count();
         if n == 0 {
             return Duration::ZERO;
         }
-        let target = ((n as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let target = (((n as f64) * q.clamp(0.0, 1.0)).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+            let in_bucket = b.load(Ordering::Relaxed);
+            seen += in_bucket;
+            if seen >= target && in_bucket > 0 {
+                let lo = 1u64 << i;
+                let hi = 1u64 << (i + 1);
+                let rank_in_bucket = (target - (seen - in_bucket)) as f64;
+                let fraction = rank_in_bucket / in_bucket as f64;
+                let us = lo as f64 + fraction * (hi - lo) as f64;
+                return Duration::from_micros(us as u64);
             }
         }
         Duration::from_micros(1u64 << HIST_BUCKETS)
     }
+
+    /// Copy-out snapshot in the shared log₂ format consumed by the
+    /// Prometheus renderer (`obs::prometheus`).
+    pub fn snapshot(&self) -> crate::obs::collector::HistSnapshot {
+        let mut snap = crate::obs::collector::HistSnapshot::default();
+        for (out, b) in snap.buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        snap.sum_us = self.sum_us.load(Ordering::Relaxed);
+        snap.count = self.count.load(Ordering::Relaxed);
+        snap
+    }
+}
+
+/// What a [`Sample`] is — drives the `# TYPE` header the Prometheus
+/// renderer (`obs::prometheus`) emits for it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleKind {
+    Counter,
+    Gauge,
+    /// Derived scalar of a histogram ([`Sample::stat`] says which);
+    /// the renderer skips these in favour of native bucket series.
+    Histogram,
 }
 
 /// One exported scalar sample from [`Metrics::export`].
@@ -80,6 +112,7 @@ pub struct Sample {
     /// Per-layer gauge index (a label, not part of the name).
     pub layer: Option<usize>,
     pub value: f64,
+    pub kind: SampleKind,
 }
 
 /// Register a monotonic counter sample.
@@ -89,6 +122,7 @@ fn register_counter(out: &mut Vec<Sample>, name: &'static str, v: &AtomicU64) {
         stat: "",
         layer: None,
         value: v.load(Ordering::Relaxed) as f64,
+        kind: SampleKind::Counter,
     });
 }
 
@@ -99,6 +133,18 @@ fn register_gauge(out: &mut Vec<Sample>, name: &'static str, layer: Option<usize
         stat: "",
         layer,
         value: value as f64,
+        kind: SampleKind::Gauge,
+    });
+}
+
+/// Register a float-valued gauge sample (ratios like occupancy).
+fn register_gauge_f(out: &mut Vec<Sample>, name: &'static str, value: f64) {
+    out.push(Sample {
+        name,
+        stat: "",
+        layer: None,
+        value,
+        kind: SampleKind::Gauge,
     });
 }
 
@@ -117,6 +163,7 @@ fn register_histogram(out: &mut Vec<Sample>, name: &'static str, h: &LatencyHist
             stat,
             layer: None,
             value,
+            kind: SampleKind::Histogram,
         });
     }
 }
@@ -166,6 +213,9 @@ pub struct Metrics {
     pub layer_kv_sessions: Vec<AtomicU64>,
     /// Gauge per layer: resident sessions served recurrent.
     pub layer_recurrent_sessions: Vec<AtomicU64>,
+    /// Gauge: decode requests waiting in the priority lane
+    /// (maintained by the engine loop on enqueue/drain).
+    pub decode_lane_depth: AtomicU64,
 }
 
 impl Metrics {
@@ -239,6 +289,13 @@ impl Metrics {
         register_counter(&mut out, "decode_misses_total", &self.decode_misses);
         register_counter(&mut out, "promotions_total", &self.promotions);
         register_counter(&mut out, "sessions_evicted_total", &self.sessions_evicted);
+        register_gauge_f(&mut out, "batch_occupancy_total", self.mean_batch_occupancy());
+        register_gauge(
+            &mut out,
+            "decode_lane_depth_total",
+            None,
+            self.decode_lane_depth.load(Ordering::Relaxed),
+        );
         register_gauge(
             &mut out,
             "resident_sessions_total",
@@ -273,6 +330,20 @@ impl Metrics {
         register_histogram(&mut out, "decode_latency_us", &self.decode_latency);
         register_histogram(&mut out, "model_step_time_us", &self.model_step_time);
         out
+    }
+
+    /// The latency histograms behind the `export()` scalar stats,
+    /// under their registered base names — the native-histogram
+    /// surface the Prometheus renderer consumes. Kept consistent with
+    /// `export()` by a unit test.
+    pub fn histogram_list(&self) -> [(&'static str, &LatencyHistogram); 5] {
+        [
+            ("request_latency_us", &self.latency),
+            ("queue_wait_us", &self.queue_wait),
+            ("exec_time_us", &self.exec_time),
+            ("decode_latency_us", &self.decode_latency),
+            ("model_step_time_us", &self.model_step_time),
+        ]
     }
 
     /// Human-readable summary block: one report covering the batch
@@ -425,6 +496,87 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 100 identical samples land in bucket [512 µs, 1024 µs); the
+        // p50 rank is halfway through it, so interpolation must give
+        // ~768 µs — strictly inside the bucket, not its upper bound.
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(700));
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= Duration::from_micros(512), "{p50:?}");
+        assert!(p50 < Duration::from_micros(1024), "{p50:?}");
+        assert!(
+            (p50.as_micros() as i64 - 768).abs() <= 8,
+            "p50 should interpolate to ~768 µs, got {p50:?}"
+        );
+        // The max quantile still reaches the bucket's upper edge.
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1024));
+    }
+
+    #[test]
+    fn snapshot_matches_counts() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(700));
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.sum_us, 703);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 2);
+        assert_eq!(snap.buckets[1], 1); // [2, 4) µs
+        assert_eq!(snap.buckets[9], 1); // [512, 1024) µs
+    }
+
+    #[test]
+    fn histogram_list_names_match_export() {
+        let m = Metrics::new();
+        let samples = m.export();
+        for (name, _) in m.histogram_list() {
+            assert!(
+                samples
+                    .iter()
+                    .any(|s| s.name == name && s.kind == SampleKind::Histogram),
+                "histogram_list name `{name}` missing from export()"
+            );
+        }
+        let exported_hists: Vec<&str> = samples
+            .iter()
+            .filter(|s| s.kind == SampleKind::Histogram)
+            .map(|s| s.name)
+            .collect();
+        for name in exported_hists {
+            assert!(
+                m.histogram_list().iter().any(|(n, _)| *n == name),
+                "exported histogram `{name}` missing from histogram_list()"
+            );
+        }
+    }
+
+    #[test]
+    fn export_has_occupancy_and_lane_depth_gauges() {
+        let m = Metrics::new();
+        m.batches_executed.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        m.decode_lane_depth.store(3, Ordering::Relaxed);
+        let samples = m.export();
+        let find = |name: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| (s.value, s.kind))
+        };
+        assert_eq!(
+            find("batch_occupancy_total"),
+            Some((2.5, SampleKind::Gauge))
+        );
+        assert_eq!(
+            find("decode_lane_depth_total"),
+            Some((3.0, SampleKind::Gauge))
+        );
     }
 
     #[test]

@@ -8,6 +8,9 @@ pub struct InferRequest {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub enqueued_at: Instant,
+    /// Observability trace ID; spans and flight-recorder events for
+    /// this request all carry it (see `obs`).
+    pub trace: u64,
 }
 
 impl InferRequest {
@@ -16,6 +19,7 @@ impl InferRequest {
             id,
             tokens,
             enqueued_at: Instant::now(),
+            trace: crate::obs::next_trace_id(),
         }
     }
 }
@@ -82,6 +86,8 @@ pub struct DecodeResponse {
     pub promoted: bool,
     /// Total latency: submit → response.
     pub latency: std::time::Duration,
+    /// The stream's trace ID (constant across the session's steps).
+    pub trace: u64,
 }
 
 /// Closing summary for a finished stream.
@@ -97,6 +103,8 @@ pub struct StreamStats {
     /// Per-layer prefix lengths at which layers promoted (`None` =
     /// layer stayed on the KV branch).
     pub promoted_at: Vec<Option<usize>>,
+    /// The stream's trace ID, for correlating with span records.
+    pub trace: u64,
 }
 
 /// Why a request was rejected or failed.

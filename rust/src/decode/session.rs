@@ -193,6 +193,7 @@ impl DecodeSession {
         let new_len = self.len + 1;
         let promoted = match crossover {
             Some(n0) if matches!(self.branch, Branch::Kv(_)) && new_len as f64 >= n0 => {
+                let _promote_span = crate::obs::span("decode.promote");
                 self.promote()
             }
             _ => false,
@@ -202,6 +203,11 @@ impl DecodeSession {
             // prefix must include the promoting token.
             self.promoted_at = Some(new_len);
         }
+        let step_span_name = match &self.branch {
+            Branch::Kv(_) => "decode.kv_step",
+            Branch::Recurrent(_) => "decode.recurrent_step",
+        };
+        let step_span = crate::obs::span(step_span_name);
         let mut output = Vec::with_capacity(self.heads * self.d);
         match &mut self.branch {
             Branch::Kv(caches) => {
@@ -215,6 +221,7 @@ impl DecodeSession {
                 }
             }
         }
+        drop(step_span);
         self.len = new_len;
         StepResult {
             output,

@@ -52,6 +52,7 @@ pub mod coordinator;
 pub mod data;
 pub mod decode;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;

@@ -44,12 +44,17 @@ pub struct SessionSummary {
     pub bytes: u64,
     /// Per-layer promotion points (`None` = layer stayed KV).
     pub promoted_at: Vec<Option<usize>>,
+    /// The session's observability trace ID.
+    pub trace: u64,
 }
 
 struct Resident {
     session: ModelSession,
     last_used: u64,
     bytes: u64,
+    /// Observability trace ID minted at open; every span and
+    /// flight-recorder event for this stream carries it.
+    trace: u64,
 }
 
 /// Keeps whole-model streaming sessions resident under a byte budget.
@@ -126,6 +131,11 @@ impl SessionStore {
         self.evicted_ids.contains(&id)
     }
 
+    /// The observability trace ID of a resident session.
+    pub fn trace_of(&self, id: u64) -> Option<u64> {
+        self.sessions.get(&id).map(|r| r.trace)
+    }
+
     /// Open (or reset) a session. Returns ids evicted to fit it.
     pub fn open(&mut self, id: u64) -> Vec<u64> {
         self.forget_eviction(id);
@@ -142,6 +152,7 @@ impl SessionStore {
                 session,
                 last_used: self.clock,
                 bytes,
+                trace: crate::obs::next_trace_id(),
             },
         );
         self.enforce_budget(Some(id))
@@ -181,6 +192,7 @@ impl SessionStore {
             branches: entry.session.branches(),
             bytes: entry.bytes,
             promoted_at: entry.session.promoted_at(),
+            trace: entry.trace,
         })
     }
 
@@ -245,6 +257,12 @@ impl SessionStore {
                 break;
             };
             self.resident_bytes -= gone.bytes;
+            crate::obs::recorder::record_event(
+                crate::obs::recorder::EventKind::Evict,
+                gone.trace,
+                victim,
+                gone.bytes,
+            );
             self.record_eviction(victim);
             evicted.push(victim);
         }

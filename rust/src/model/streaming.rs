@@ -175,16 +175,23 @@ impl StreamingModel {
             self.blocks.len(),
             "session layer stack does not match this model"
         );
+        let model_span = crate::obs::span("model.step");
         let mut h = token.clone();
         let mut layers = Vec::with_capacity(self.blocks.len());
         for (l, block) in self.blocks.iter().enumerate() {
+            // Clamp so a (hypothetical) very deep model cannot collide
+            // with the NO_LAYER sentinel.
+            let layer_tag = l.min(u16::MAX as usize - 1) as u16;
+            let layer_span = crate::obs::span_layer("model.block_step", layer_tag);
             let (out, r) = block.stream_step(&h, &mut session.layers[l], session.thresholds[l]);
+            drop(layer_span);
             layers.push(LayerStep {
                 branch: r.branch,
                 promoted: r.promoted,
             });
             h = out;
         }
+        drop(model_span);
         session.len += 1;
         ModelStepResult {
             output: h.into_data(),

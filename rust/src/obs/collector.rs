@@ -1,0 +1,166 @@
+//! Global span collector: per-phase log₂ latency histograms drained
+//! from the thread-local span buffers (see `span::flush`). All state
+//! is atomics behind a `OnceLock`, so recording is lock-free and the
+//! only allocation happens once at warm-up.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::span::{Rec, NO_LAYER};
+
+/// The registered span names. The span API rejects anything else, so
+/// the set of exposition series is closed and documented here:
+///
+/// - `engine.exec_batch` — one padded batch through the executor
+/// - `batcher.queue_wait` — submit → batch seal, per request
+/// - `lane.queue_wait` — decode submit → lane service, per step
+/// - `model.step` — whole-model single-token step, all layers
+/// - `model.block_step` — one layer's step (carries a `layer`)
+/// - `decode.kv_step` — attention step served on the KV branch
+/// - `decode.recurrent_step` — attention step served recurrent
+/// - `decode.promote` — one-time KV→recurrent promotion build
+pub const SPAN_NAMES: [&str; 8] = [
+    "engine.exec_batch",
+    "batcher.queue_wait",
+    "lane.queue_wait",
+    "model.step",
+    "model.block_step",
+    "decode.kv_step",
+    "decode.recurrent_step",
+    "decode.promote",
+];
+
+/// Per-layer histograms kept for `model.block_step`; deeper layers
+/// clamp into the last slot.
+pub const MAX_LAYER_HISTS: usize = 8;
+
+pub(crate) fn lookup(name: &str) -> Option<usize> {
+    SPAN_NAMES.iter().position(|n| *n == name)
+}
+
+const HIST_BUCKETS: usize = 32;
+
+/// Lock-free log₂ histogram; bucket i counts durations in
+/// `[2^i, 2^(i+1))` microseconds.
+struct Hist32 {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Hist32 {
+    fn new() -> Self {
+        Hist32 {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        let idx = (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        let mut snap = HistSnapshot::default();
+        for (out, b) in snap.buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        snap.sum_us = self.sum_us.load(Ordering::Relaxed);
+        snap.count = self.count.load(Ordering::Relaxed);
+        snap
+    }
+}
+
+/// Copy-out view of one log₂ histogram (`buckets[i]` counts samples
+/// in `[2^i, 2^(i+1))` µs). Shared between the span collector and
+/// `coordinator::metrics::LatencyHistogram` so the Prometheus
+/// renderer has a single histogram input type.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; 32],
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+struct Collector {
+    span_hists: [Hist32; SPAN_NAMES.len()],
+    layer_hists: [Hist32; MAX_LAYER_HISTS],
+    spans_recorded: AtomicU64,
+    spans_dropped: AtomicU64,
+    unknown_spans: AtomicU64,
+}
+
+impl Collector {
+    fn new() -> Self {
+        Collector {
+            span_hists: std::array::from_fn(|_| Hist32::new()),
+            layer_hists: std::array::from_fn(|_| Hist32::new()),
+            spans_recorded: AtomicU64::new(0),
+            spans_dropped: AtomicU64::new(0),
+            unknown_spans: AtomicU64::new(0),
+        }
+    }
+}
+
+fn global() -> &'static Collector {
+    static GLOBAL: OnceLock<Collector> = OnceLock::new();
+    GLOBAL.get_or_init(Collector::new)
+}
+
+pub(crate) fn observe_rec(rec: &Rec) {
+    let g = global();
+    if let Some(h) = g.span_hists.get(rec.name_idx as usize) {
+        h.record_us(rec.dur_us);
+    }
+    if rec.layer != NO_LAYER {
+        let l = (rec.layer as usize).min(MAX_LAYER_HISTS - 1);
+        if let Some(h) = g.layer_hists.get(l) {
+            h.record_us(rec.dur_us);
+        }
+    }
+    g.spans_recorded.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_dropped() {
+    global().spans_dropped.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn note_unknown() {
+    global().unknown_spans.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot of the histogram for `SPAN_NAMES[idx]` (empty snapshot
+/// for out-of-range indices).
+pub fn span_snapshot(idx: usize) -> HistSnapshot {
+    global()
+        .span_hists
+        .get(idx)
+        .map(Hist32::snapshot)
+        .unwrap_or_default()
+}
+
+/// Snapshot of the per-layer `model.block_step` histogram.
+pub fn layer_snapshot(layer: usize) -> HistSnapshot {
+    global()
+        .layer_hists
+        .get(layer.min(MAX_LAYER_HISTS - 1))
+        .map(Hist32::snapshot)
+        .unwrap_or_default()
+}
+
+/// `(recorded, dropped, unknown)` span meta counters.
+pub fn meta_counters() -> (u64, u64, u64) {
+    let g = global();
+    (
+        g.spans_recorded.load(Ordering::Relaxed),
+        g.spans_dropped.load(Ordering::Relaxed),
+        g.unknown_spans.load(Ordering::Relaxed),
+    )
+}

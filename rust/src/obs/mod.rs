@@ -1,0 +1,31 @@
+//! Observability for the serving stack: lock-free span timers, a
+//! flight-recorder ring of recent events, and Prometheus text
+//! exposition.
+//!
+//! The three pillars and how they connect:
+//!
+//! 1. **Spans** (`span`): `obs::span("engine.exec_batch")` returns an
+//!    RAII timer; on drop the record lands in a thread-local buffer,
+//!    drained by [`flush`] into the collector and recorder. Trace IDs
+//!    minted by [`next_trace_id`] ride along via [`trace_scope`].
+//! 2. **Flight recorder** (`recorder`): a fixed-capacity lock-free
+//!    ring of recent spans and lifecycle events (enqueue, batch seal,
+//!    promotion, eviction, typed error), dumpable as JSON — the
+//!    engine dumps it automatically when an error surfaces.
+//! 3. **Exposition** (`prometheus`): renders `Metrics::export()` plus
+//!    span-derived histograms in Prometheus text format, served via
+//!    `Engine::scrape()`.
+//!
+//! Span naming convention: `<subsystem>.<phase>`, registered in
+//! `collector::SPAN_NAMES`. See the ROADMAP's "Observability"
+//! section for the propagation rules.
+
+pub mod collector;
+pub mod prometheus;
+pub mod recorder;
+pub mod span;
+
+pub use span::{
+    current_trace, flush, next_trace_id, observe, span, span_layer, trace_scope, SpanGuard,
+    TraceGuard, NO_LAYER,
+};

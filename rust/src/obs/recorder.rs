@@ -1,0 +1,293 @@
+//! Flight recorder: a fixed-capacity, lock-free ring of the most
+//! recent span/event records. Writers stamp a slot with a seqlock
+//! protocol (sequence cleared, payload stored, sequence published);
+//! readers double-check the sequence and skip torn slots, so a
+//! snapshot never blocks the hot path. Payload fields are atomics, so
+//! a torn read is merely skipped — never undefined behaviour.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::collector::SPAN_NAMES;
+use super::span::{now_us, Rec, NO_LAYER};
+use crate::util::json::Json;
+
+/// What a ring event describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A finished span (name and duration carried in the payload).
+    Span,
+    /// A request entered a batcher bucket or the decode lane
+    /// (`a` = bucket/session, `b` = queue depth after enqueue).
+    Enqueue,
+    /// The batcher sealed a batch (`a` = batch size, `b` = bucket).
+    BatchSeal,
+    /// A session crossed N₀ and promoted KV→recurrent.
+    Promote,
+    /// The store evicted a session (`a` = session id, `b` = bytes).
+    Evict,
+    /// A typed error surfaced (`a` = error code, `b` = session id).
+    Error,
+}
+
+impl EventKind {
+    fn code(self) -> u64 {
+        match self {
+            EventKind::Span => 0,
+            EventKind::Enqueue => 1,
+            EventKind::BatchSeal => 2,
+            EventKind::Promote => 3,
+            EventKind::Evict => 4,
+            EventKind::Error => 5,
+        }
+    }
+
+    fn from_code(code: u64) -> Option<EventKind> {
+        match code {
+            0 => Some(EventKind::Span),
+            1 => Some(EventKind::Enqueue),
+            2 => Some(EventKind::BatchSeal),
+            3 => Some(EventKind::Promote),
+            4 => Some(EventKind::Evict),
+            5 => Some(EventKind::Error),
+            _ => None,
+        }
+    }
+
+    /// Stable label used in JSON dumps and the exposition.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Span => "span",
+            EventKind::Enqueue => "enqueue",
+            EventKind::BatchSeal => "batch_seal",
+            EventKind::Promote => "promote",
+            EventKind::Evict => "evict",
+            EventKind::Error => "error",
+        }
+    }
+}
+
+/// Error codes carried in an [`EventKind::Error`] event's `a` field.
+pub const ERR_EXEC_FAILED: u64 = 1;
+pub const ERR_NEEDS_REPREFILL: u64 = 2;
+pub const ERR_UNKNOWN_SESSION: u64 = 3;
+
+/// Human label for an error code.
+pub fn error_code_label(code: u64) -> &'static str {
+    match code {
+        ERR_EXEC_FAILED => "exec_failed",
+        ERR_NEEDS_REPREFILL => "needs_reprefill",
+        ERR_UNKNOWN_SESSION => "unknown_session",
+        _ => "unknown",
+    }
+}
+
+#[derive(Default)]
+struct Slot {
+    /// 0 while a writer owns the slot; otherwise the 1-based ticket.
+    seq: AtomicU64,
+    /// `kind << 32 | name_idx << 16 | layer`.
+    meta: AtomicU64,
+    trace: AtomicU64,
+    t_us: AtomicU64,
+    dur_us: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// One event to push; maps onto the ring slot payload.
+#[derive(Clone, Copy)]
+pub struct EventRecord {
+    pub kind: EventKind,
+    pub name_idx: u16,
+    pub layer: u16,
+    pub trace: u64,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Decoded, owned view of one ring slot.
+#[derive(Clone, Copy, Debug)]
+pub struct EventView {
+    /// 1-based global sequence number (total order of pushes).
+    pub seq: u64,
+    pub kind: EventKind,
+    /// Span name for span events; the kind label otherwise.
+    pub name: &'static str,
+    pub layer: Option<usize>,
+    pub trace: u64,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Fixed-capacity lock-free ring. Capacity is set at construction;
+/// pushes wrap and overwrite the oldest slot.
+pub struct Ring {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Ring {
+        let cap = capacity.max(1);
+        Ring {
+            head: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+        }
+    }
+
+    /// Record an event; returns its 1-based sequence number.
+    pub fn push(&self, rec: EventRecord) -> u64 {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed) + 1;
+        let idx = ((ticket - 1) % self.slots.len() as u64) as usize;
+        if let Some(slot) = self.slots.get(idx) {
+            slot.seq.store(0, Ordering::Release);
+            let meta =
+                (rec.kind.code() << 32) | ((rec.name_idx as u64) << 16) | rec.layer as u64;
+            slot.meta.store(meta, Ordering::Relaxed);
+            slot.trace.store(rec.trace, Ordering::Relaxed);
+            slot.t_us.store(rec.t_us, Ordering::Relaxed);
+            slot.dur_us.store(rec.dur_us, Ordering::Relaxed);
+            slot.a.store(rec.a, Ordering::Relaxed);
+            slot.b.store(rec.b, Ordering::Relaxed);
+            slot.seq.store(ticket, Ordering::Release);
+        }
+        ticket
+    }
+
+    /// Total events ever pushed (monotonic; exceeds capacity once the
+    /// ring has wrapped).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Best-effort consistent view of the resident events, oldest
+    /// first. Slots being overwritten mid-read are skipped.
+    pub fn snapshot(&self) -> Vec<EventView> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let seq1 = slot.seq.load(Ordering::Acquire);
+            if seq1 == 0 {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let trace = slot.trace.load(Ordering::Relaxed);
+            let t_us = slot.t_us.load(Ordering::Relaxed);
+            let dur_us = slot.dur_us.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            let seq2 = slot.seq.load(Ordering::Acquire);
+            if seq2 != seq1 {
+                continue;
+            }
+            let kind = match EventKind::from_code(meta >> 32) {
+                Some(k) => k,
+                None => continue,
+            };
+            let name_idx = ((meta >> 16) & 0xffff) as usize;
+            let layer16 = (meta & 0xffff) as u16;
+            out.push(EventView {
+                seq: seq1,
+                kind,
+                name: match kind {
+                    EventKind::Span => SPAN_NAMES.get(name_idx).copied().unwrap_or("?"),
+                    _ => kind.label(),
+                },
+                layer: if layer16 == NO_LAYER {
+                    None
+                } else {
+                    Some(layer16 as usize)
+                },
+                trace,
+                t_us,
+                dur_us,
+                a,
+                b,
+            });
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+const RING_CAP: usize = 4096;
+
+/// The process-global flight recorder.
+pub fn global() -> &'static Ring {
+    static GLOBAL: OnceLock<Ring> = OnceLock::new();
+    GLOBAL.get_or_init(|| Ring::new(RING_CAP))
+}
+
+pub(crate) fn record_span(rec: &Rec) -> u64 {
+    global().push(EventRecord {
+        kind: EventKind::Span,
+        name_idx: rec.name_idx,
+        layer: rec.layer,
+        trace: rec.trace,
+        t_us: rec.start_us,
+        dur_us: rec.dur_us,
+        a: 0,
+        b: 0,
+    })
+}
+
+/// Push a non-span event into the global ring; returns its sequence
+/// number. `a`/`b` meanings are per-kind (see [`EventKind`]).
+pub fn record_event(kind: EventKind, trace: u64, a: u64, b: u64) -> u64 {
+    global().push(EventRecord {
+        kind,
+        name_idx: 0,
+        layer: NO_LAYER,
+        trace,
+        t_us: now_us(),
+        dur_us: 0,
+        a,
+        b,
+    })
+}
+
+/// Push a typed-error event (`code` is one of the `ERR_*` constants).
+pub fn record_error(code: u64, trace: u64, session: u64) -> u64 {
+    record_event(EventKind::Error, trace, code, session)
+}
+
+fn view_json(e: &EventView) -> Json {
+    let mut obj = Json::from_pairs(vec![
+        ("seq", Json::Num(e.seq as f64)),
+        ("kind", Json::Str(e.kind.label().to_string())),
+        ("name", Json::Str(e.name.to_string())),
+        ("trace", Json::Num(e.trace as f64)),
+        ("t_us", Json::Num(e.t_us as f64)),
+        ("dur_us", Json::Num(e.dur_us as f64)),
+        ("a", Json::Num(e.a as f64)),
+        ("b", Json::Num(e.b as f64)),
+    ]);
+    if let Some(l) = e.layer {
+        obj.set("layer", Json::Num(l as f64));
+    }
+    if e.kind == EventKind::Error {
+        obj.set("error", Json::Str(error_code_label(e.a).to_string()));
+    }
+    obj
+}
+
+/// JSON dump of the most recent `limit` resident events (everything
+/// resident when `limit` is 0). A nonzero `boundary` keeps only
+/// events with `seq <= boundary`, so a dump taken at error time
+/// excludes traffic that arrived after the error was recorded.
+pub fn dump_json(limit: usize, boundary: u64) -> Json {
+    let events = global().snapshot();
+    let mut views: Vec<&EventView> = events
+        .iter()
+        .filter(|e| boundary == 0 || e.seq <= boundary)
+        .collect();
+    if limit > 0 && views.len() > limit {
+        let skip = views.len() - limit;
+        views.drain(..skip);
+    }
+    Json::Arr(views.into_iter().map(view_json).collect())
+}

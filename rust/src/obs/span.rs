@@ -1,0 +1,215 @@
+//! Lock-free RAII span timers with per-request trace propagation.
+//!
+//! This is the decode hot path's instrumentation layer, so the
+//! discipline here is machine-checked by taylor-lint rule R6: no
+//! locks and no allocation. Finished spans land in a fixed-size
+//! thread-local buffer; [`flush`] (or a full buffer) drains them into
+//! the global collector histograms and the flight recorder ring, both
+//! of which are atomics-only.
+//!
+//! Trace IDs are plain `u64`s minted by [`next_trace_id`]. The engine
+//! installs a request's trace on the worker thread via [`trace_scope`]
+//! before stepping it, so every span opened underneath — branch
+//! dispatch, per-layer block steps, promotion — carries the same ID
+//! without any plumbing through the model code.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use super::collector;
+use super::recorder;
+
+/// Layer field value meaning "not layer-scoped".
+pub const NO_LAYER: u16 = u16::MAX;
+
+/// One finished span, staged in the thread-local buffer.
+#[derive(Clone, Copy)]
+pub(crate) struct Rec {
+    pub name_idx: u16,
+    pub layer: u16,
+    pub trace: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+const EMPTY_REC: Rec = Rec {
+    name_idx: 0,
+    layer: NO_LAYER,
+    trace: 0,
+    start_us: 0,
+    dur_us: 0,
+};
+
+const BUF_CAP: usize = 64;
+
+struct Buf {
+    recs: [Rec; BUF_CAP],
+    len: usize,
+}
+
+thread_local! {
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+    static BUF: RefCell<Buf> = const {
+        RefCell::new(Buf {
+            recs: [EMPTY_REC; BUF_CAP],
+            len: 0,
+        })
+    };
+}
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a fresh, process-unique, nonzero trace ID.
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The trace ID installed on this thread (0 when none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.try_with(Cell::get).unwrap_or(0)
+}
+
+/// RAII guard restoring the previously installed trace on drop.
+pub struct TraceGuard {
+    prev: u64,
+}
+
+/// Install `trace` as this thread's current trace until the returned
+/// guard drops; spans opened meanwhile inherit it.
+pub fn trace_scope(trace: u64) -> TraceGuard {
+    let prev = CURRENT_TRACE.try_with(|c| c.replace(trace)).unwrap_or(0);
+    TraceGuard { prev }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let _ = CURRENT_TRACE.try_with(|c| c.set(self.prev));
+    }
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-local observability epoch.
+pub(crate) fn now_us() -> u64 {
+    Instant::now().duration_since(epoch()).as_micros() as u64
+}
+
+/// RAII timer: records a span for its registered phase on drop.
+pub struct SpanGuard {
+    name_idx: u16,
+    layer: u16,
+    trace: u64,
+    start: Instant,
+    armed: bool,
+}
+
+/// Start a span for a registered phase name (one of
+/// `collector::SPAN_NAMES`). Unknown names disarm the guard and bump
+/// a counter instead of recording, so a typo cannot grow state.
+pub fn span(name: &'static str) -> SpanGuard {
+    span_layer(name, NO_LAYER)
+}
+
+/// Start a span attributed to a model layer (clamped into the
+/// collector's per-layer histogram range at record time).
+pub fn span_layer(name: &'static str, layer: u16) -> SpanGuard {
+    match collector::lookup(name) {
+        Some(idx) => SpanGuard {
+            name_idx: idx as u16,
+            layer,
+            trace: current_trace(),
+            start: Instant::now(),
+            armed: true,
+        },
+        None => {
+            collector::note_unknown();
+            SpanGuard {
+                name_idx: 0,
+                layer,
+                trace: 0,
+                start: Instant::now(),
+                armed: false,
+            }
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        push_rec(Rec {
+            name_idx: self.name_idx,
+            layer: self.layer,
+            trace: self.trace,
+            start_us: now_us().saturating_sub(dur_us),
+            dur_us,
+        });
+    }
+}
+
+/// Record an externally measured duration (e.g. queue wait computed
+/// from an enqueue timestamp) against a registered span name.
+pub fn observe(name: &'static str, dur: Duration, trace: u64) {
+    match collector::lookup(name) {
+        Some(idx) => {
+            let dur_us = dur.as_micros() as u64;
+            push_rec(Rec {
+                name_idx: idx as u16,
+                layer: NO_LAYER,
+                trace,
+                start_us: now_us().saturating_sub(dur_us),
+                dur_us,
+            });
+        }
+        None => collector::note_unknown(),
+    }
+}
+
+fn push_rec(rec: Rec) {
+    let pushed = BUF
+        .try_with(|buf| {
+            if let Ok(mut b) = buf.try_borrow_mut() {
+                if b.len == BUF_CAP {
+                    drain(&mut b);
+                }
+                let len = b.len;
+                if let Some(slot) = b.recs.get_mut(len) {
+                    *slot = rec;
+                    b.len = len + 1;
+                    return true;
+                }
+            }
+            false
+        })
+        .unwrap_or(false);
+    if !pushed {
+        collector::note_dropped();
+    }
+}
+
+fn drain(b: &mut Buf) {
+    for rec in b.recs.iter().take(b.len) {
+        collector::observe_rec(rec);
+        recorder::record_span(rec);
+    }
+    b.len = 0;
+}
+
+/// Drain this thread's span buffer into the collector and recorder.
+/// The engine calls this before answering a waiter, so a blocking
+/// caller observes its complete trace in the flight recorder.
+pub fn flush() {
+    let _ = BUF.try_with(|buf| {
+        if let Ok(mut b) = buf.try_borrow_mut() {
+            drain(&mut b);
+        }
+    });
+}

@@ -1,0 +1,238 @@
+//! Integration tests for the observability subsystem: end-to-end trace
+//! propagation through a forced mid-stream promotion, Prometheus
+//! exposition round-tripping through the strict validator, concurrent
+//! histogram recording, ring wraparound, and the automatic
+//! flight-recorder dump on an induced eviction error.
+//!
+//! These run in their own test binary on purpose: the collector and
+//! flight recorder are process-global, so assertions filter by trace
+//! or session ID to stay independent of sibling tests.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use taylorshift::attention::selector::Selector;
+use taylorshift::coordinator::engine::{BatchExecutor, Engine, EngineConfig};
+use taylorshift::coordinator::metrics::LatencyHistogram;
+use taylorshift::coordinator::request::RequestError;
+use taylorshift::coordinator::router::Route;
+use taylorshift::decode::DecodeConfig;
+use taylorshift::obs::prometheus::validate_exposition;
+use taylorshift::obs::recorder::{self, EventKind, EventRecord, Ring};
+use taylorshift::obs::NO_LAYER;
+use taylorshift::tensor::Tensor;
+use taylorshift::util::json::Json;
+
+/// Minimal prefill executor (decode tests never touch it).
+struct NullExec;
+
+impl BatchExecutor for NullExec {
+    fn execute(&mut self, _route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(tokens.iter().map(|_| vec![0.0; 4]).collect())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &[1, 8]
+    }
+}
+
+fn promotion_engine(d: usize, decode: DecodeConfig) -> Engine {
+    Engine::start_with(
+        EngineConfig {
+            head_dim: d,
+            // Crossover at N₀ = 8: sessions start on KV and promote
+            // exactly when the prefix reaches 8 tokens.
+            selector: Selector::calibrated(vec![(d, 8.0)]),
+            decode,
+            ..EngineConfig::default()
+        },
+        || Ok(NullExec),
+    )
+    .expect("engine starts")
+}
+
+/// Acceptance criterion: a forced mid-stream promotion leaves a span
+/// trail of kv_step × 7 → promote → recurrent_step × 13, all carrying
+/// one trace ID minted at stream open and returned on every response.
+#[test]
+fn promotion_trace_spans_carry_one_trace_end_to_end() {
+    let d = 16usize;
+    let decode = DecodeConfig {
+        heads: 1,
+        n_layers: 1,
+        d_ff: 16,
+        ..DecodeConfig::default()
+    };
+    let engine = promotion_engine(d, decode);
+    let sid = engine.submit_stream().unwrap();
+    let steps = 20usize;
+    let mut trace = 0u64;
+    for t in 0..steps {
+        let token = Tensor::randn(&[1, d], 9_000 + t as u64);
+        let resp = engine.decode_step(sid, token).unwrap();
+        assert_eq!(resp.step, t + 1);
+        assert_eq!(resp.promoted, t + 1 == 8, "promotion exactly at N₀");
+        if t == 0 {
+            trace = resp.trace;
+            assert_ne!(trace, 0, "stream must carry a nonzero trace ID");
+        } else {
+            assert_eq!(resp.trace, trace, "one trace per stream");
+        }
+    }
+
+    // The decode branch spans for this trace, in ring (= record) order.
+    let events = recorder::global().snapshot();
+    let branch_seq: Vec<&str> = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Span && e.trace == trace)
+        .filter(|e| {
+            ["decode.kv_step", "decode.promote", "decode.recurrent_step"].contains(&e.name)
+        })
+        .map(|e| e.name)
+        .collect();
+    let mut want = vec!["decode.kv_step"; 7];
+    want.push("decode.promote");
+    want.extend(std::iter::repeat("decode.recurrent_step").take(13));
+    assert_eq!(branch_seq, want, "span sequence across the KV→recurrent switch");
+
+    // Per-layer block spans exist under the same trace, tagged layer 0.
+    let block_spans = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Span && e.trace == trace)
+        .filter(|e| e.name == "model.block_step")
+        .count();
+    assert_eq!(block_spans, steps, "one block span per step per layer");
+    assert!(events
+        .iter()
+        .filter(|e| e.trace == trace && e.name == "model.block_step")
+        .all(|e| e.layer == Some(0)));
+
+    // The promotion also landed as a lifecycle event on the ring.
+    assert!(events.iter().any(|e| e.kind == EventKind::Promote && e.trace == trace && e.a == sid));
+
+    // The close-stream stats return the same trace for correlation.
+    let stats = engine.close_stream(sid).unwrap();
+    assert_eq!(stats.trace, trace);
+
+    // Scrape after the stream: the exposition must round-trip through
+    // the strict validator and carry per-layer and per-branch series.
+    let text = engine.scrape();
+    let stats = validate_exposition(&text).expect("exposition validates");
+    assert!(stats.types > 10, "several families declared");
+    assert!(stats.histograms > 5, "native histogram groups present");
+    for needle in [
+        "span_time_us",
+        "layer=\"0\"",
+        "branch=\"kv\"",
+        "branch=\"recurrent\"",
+        "taylorshift_decode_steps_total 20",
+        "decode_lane_depth_total",
+        "batch_occupancy_total",
+    ] {
+        assert!(text.contains(needle), "scrape missing {needle}:\n{text}");
+    }
+}
+
+/// Satellite (c): multi-thread stress on `LatencyHistogram::record`
+/// racing `export()`/`quantile()` readers — the final count is exact.
+#[test]
+fn histogram_concurrent_records_are_not_lost() {
+    let h = LatencyHistogram::new();
+    let threads = 8usize;
+    let per_thread = 20_000usize;
+    std::thread::scope(|scope| {
+        for i in 0..threads {
+            let h = &h;
+            scope.spawn(move || {
+                for j in 0..per_thread {
+                    h.record(Duration::from_micros(1 + ((i * per_thread + j) % 1000) as u64));
+                }
+            });
+        }
+        // Concurrent readers must never block or see torn state.
+        let h = &h;
+        scope.spawn(move || {
+            for _ in 0..100 {
+                let snap = h.snapshot();
+                assert!(snap.buckets.iter().sum::<u64>() <= (threads * per_thread) as u64);
+                let _ = h.quantile(0.99);
+            }
+        });
+    });
+    assert_eq!(h.count(), (threads * per_thread) as u64);
+    let snap = h.snapshot();
+    assert_eq!(snap.count, (threads * per_thread) as u64);
+    assert_eq!(snap.buckets.iter().sum::<u64>(), snap.count);
+    assert!(h.quantile(0.5) >= Duration::from_micros(1));
+}
+
+/// Satellite (c): ring wraparound keeps exactly the newest `capacity`
+/// events, in contiguous ascending sequence order.
+#[test]
+fn ring_wraparound_keeps_newest_events_in_order() {
+    let ring = Ring::new(16);
+    for i in 0..50u64 {
+        ring.push(EventRecord {
+            kind: EventKind::Enqueue,
+            name_idx: 0,
+            layer: NO_LAYER,
+            trace: i,
+            t_us: i,
+            dur_us: 0,
+            a: i,
+            b: 0,
+        });
+    }
+    assert_eq!(ring.pushed(), 50);
+    let events = ring.snapshot();
+    assert_eq!(events.len(), 16, "resident events == capacity");
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (35..=50).collect::<Vec<u64>>());
+    for e in &events {
+        assert_eq!(e.kind, EventKind::Enqueue);
+        assert_eq!(e.trace + 1, e.seq, "payload stays paired with its seq");
+    }
+}
+
+/// Satellite (f, engine side): an induced eviction error produces an
+/// automatic flight-recorder dump — valid JSON naming the typed error
+/// and bounded to events from before the error.
+#[test]
+fn eviction_error_surfaces_flight_recorder_dump() {
+    let d = 16usize;
+    let decode = DecodeConfig {
+        heads: 1,
+        n_layers: 1,
+        d_ff: 16,
+        max_sessions: 1,
+        ..DecodeConfig::default()
+    };
+    let engine = promotion_engine(d, decode);
+    assert!(engine.last_error_dump().is_none(), "no error yet");
+
+    let s1 = engine.submit_stream().unwrap();
+    engine.decode_step(s1, Tensor::randn(&[1, d], 1)).unwrap();
+    // Opening a second stream under max_sessions=1 evicts s1.
+    let s2 = engine.submit_stream().unwrap();
+    let err = engine.decode_step(s1, Tensor::randn(&[1, d], 2)).unwrap_err();
+    assert_eq!(err, RequestError::NeedsReprefill { id: s1 });
+
+    let dump = engine.last_error_dump().expect("dump after typed error");
+    let parsed = Json::parse(&dump).expect("dump is valid JSON");
+    assert_eq!(parsed.get("error").and_then(Json::as_str), Some("needs_reprefill"));
+    assert_eq!(parsed.get("subject").and_then(Json::as_f64), Some(s1 as f64));
+    let events = parsed.get("events").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty(), "dump carries the leading events");
+    let boundary = parsed.get("seq").and_then(Json::as_f64).unwrap();
+    assert!(events
+        .iter()
+        .all(|e| e.get("seq").and_then(Json::as_f64).unwrap_or(f64::MAX) <= boundary));
+
+    // The eviction itself is on the ring as a lifecycle event.
+    let ring = recorder::global().snapshot();
+    assert!(ring.iter().any(|e| e.kind == EventKind::Evict && e.a == s1));
+
+    // The surviving stream still decodes.
+    engine.decode_step(s2, Tensor::randn(&[1, d], 3)).unwrap();
+    assert_eq!(engine.metrics().decode_misses.load(Ordering::Relaxed), 1);
+}
