@@ -31,12 +31,20 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let decode_tokens = args.usize_or("decode-tokens", 24);
 
-    let cfg = EngineConfig {
+    let spill_dir =
+        std::env::temp_dir().join(format!("taylorshift-scrape-spill-{}", std::process::id()));
+    let cfg = EngineConfig::builder()
         // Calibrated crossover at N₀ = 8 so the stream below exercises
         // both decode branches and the promotion inside one short run.
-        selector: Selector::calibrated(vec![(16, 8.0)]),
-        ..EngineConfig::default()
-    };
+        .selector(Selector::calibrated(vec![(16, 8.0)]))
+        // One resident session + the spill tier: opening a second
+        // stream parks the first on disk, touching it restores it —
+        // so the spill/restore series below are nonzero.
+        .max_sessions(1)
+        .spill_enabled(true)
+        .spill_dir(spill_dir.clone())
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let d_model = cfg.decode.heads * cfg.head_dim;
     let engine = Engine::start_with(cfg, || Ok(NullPrefill))?;
 
@@ -55,6 +63,22 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("{e}"))?;
     }
     engine.close_stream(sid).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Spill round trip: `b` evicts `a` to disk, touching `a` restores
+    // it, so the spill counters and restore histogram are populated.
+    let a = engine.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine
+        .decode_step(a, Tensor::randn(&[1, d_model], 501))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let b = engine.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine
+        .decode_step(b, Tensor::randn(&[1, d_model], 502))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine
+        .decode_step(a, Tensor::randn(&[1, d_model], 503))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine.close_stream(a).map_err(|e| anyhow::anyhow!("{e}"))?;
+    engine.close_stream(b).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let text = engine.scrape();
     let stats = validate_exposition(&text)
@@ -76,6 +100,11 @@ fn main() -> anyhow::Result<()> {
         "layer=\"1\"",
         "branch=\"kv\"",
         "branch=\"recurrent\"",
+        // `b` opening spills `a`; restoring `a` spills `b` in turn.
+        "taylorshift_sessions_spilled_total 2",
+        "taylorshift_sessions_restored_total 1",
+        "taylorshift_spill_failures_total 0",
+        "taylorshift_restore_latency_us",
     ] {
         if !text.contains(needle) {
             anyhow::bail!("exposition is missing expected series `{needle}`");
@@ -86,5 +115,6 @@ fn main() -> anyhow::Result<()> {
         std::fs::write(path, &text)?;
         println!("wrote exposition sample to {path}");
     }
+    let _ = std::fs::remove_dir_all(spill_dir);
     Ok(())
 }

@@ -18,9 +18,16 @@
 //! end, and an induced session eviction at the end shows the
 //! flight-recorder dump that accompanies every typed engine error.
 //!
+//! The finale demos the session **spill/restore tier**: with spill
+//! enabled, an induced eviction parks a stream's state in a spill file
+//! and the next decode step restores it transparently — no
+//! `NeedsReprefill`. `--spill-out PATH` writes the spill/restore
+//! counters as JSON (CI uploads them next to the bench artifacts).
+//!
 //! Run: `cargo run --release --example serve_longseq -- --requests 200`
 //! Flags: --requests N --concurrency C --variant auto|direct|efficient
 //!        --max-delay-ms D --decode-tokens T --seed S --scrape-out PATH
+//!        --spill-out PATH
 
 use std::time::{Duration, Instant};
 use taylorshift::coordinator::batcher::BatchPolicy;
@@ -55,20 +62,17 @@ fn main() -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 1);
     let buckets = vec![128usize, 256, 512, 1024];
 
-    let mut cfg = EngineConfig {
-        buckets: buckets.clone(),
-        head_dim: 16,
-        policy: BatchPolicy {
+    let mut cfg = EngineConfig::builder()
+        .buckets(buckets.clone())
+        .head_dim(16)
+        .policy(BatchPolicy {
             max_batch: 8,
-            max_delay: Duration::from_micros(
-                (args.f64_or("max-delay-ms", 2.0) * 1000.0) as u64,
-            ),
-        },
-        queue_limit: 512,
-        forced_variant: None,
-        selector: taylorshift::attention::selector::Selector::analytical(),
-        ..EngineConfig::default()
-    };
+            max_delay: Duration::from_micros((args.f64_or("max-delay-ms", 2.0) * 1000.0) as u64),
+        })
+        .queue_limit(512)
+        .selector(taylorshift::attention::selector::Selector::analytical())
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(v) = args.get("variant") {
         if v != "auto" {
             cfg.forced_variant = taylorshift::attention::AttentionVariant::parse(v);
@@ -203,13 +207,10 @@ fn main() -> anyhow::Result<()> {
     // the ring events leading up to the error.
     println!("\ninducing a session eviction to demo the flight recorder...");
     let tiny = Engine::start_with(
-        EngineConfig {
-            decode: taylorshift::decode::DecodeConfig {
-                max_sessions: 1,
-                ..Default::default()
-            },
-            ..EngineConfig::default()
-        },
+        EngineConfig::builder()
+            .max_sessions(1)
+            .build()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
         || Ok(NullPrefill { sizes: vec![1, 8] }),
     )?;
     let victim = tiny.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -226,6 +227,95 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+
+    // --- spill/restore: the same eviction with the disk tier enabled ---
+    // A 1-session store with spill on parks the victim's full state
+    // stack (KV rows or f64 Taylor moments) in a checksummed file;
+    // touching the victim again restores it mid-stream instead of
+    // failing with NeedsReprefill.
+    println!("\nsame eviction with spill enabled: state parks on disk and restores...");
+    let spill_dir =
+        std::env::temp_dir().join(format!("taylorshift-demo-spill-{}", std::process::id()));
+    let spilly = Engine::start_with(
+        EngineConfig::builder()
+            .max_sessions(1)
+            .spill_enabled(true)
+            .spill_dir(spill_dir.clone())
+            .build()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        || Ok(NullPrefill { sizes: vec![1, 8] }),
+    )?;
+    let victim = spilly.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    for t in 0..4u64 {
+        let token = Tensor::randn(&[1, d_model], seed.wrapping_add(t));
+        spilly
+            .decode_step(victim, token)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let bump = spilly.submit_stream().map_err(|e| anyhow::anyhow!("{e}"))?;
+    spilly
+        .decode_step(bump, Tensor::randn(&[1, d_model], seed.wrapping_add(100)))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let resp = spilly
+        .decode_step(victim, Tensor::randn(&[1, d_model], seed.wrapping_add(4)))
+        .map_err(|e| anyhow::anyhow!("spilled stream did not restore: {e}"))?;
+    let m = spilly.metrics();
+    let restored = m.sessions_restored.load(std::sync::atomic::Ordering::Relaxed);
+    if restored == 0 || resp.step != 5 {
+        anyhow::bail!(
+            "expected a transparent restore continuing at step 5, got step {} ({} restored)",
+            resp.step,
+            restored
+        );
+    }
+    println!(
+        "  victim restored mid-stream at step {}: spilled={} restored={} failures={} \
+         restore p50 {:?}",
+        resp.step,
+        m.sessions_spilled.load(std::sync::atomic::Ordering::Relaxed),
+        restored,
+        m.spill_failures.load(std::sync::atomic::Ordering::Relaxed),
+        m.restore_latency.quantile(0.5),
+    );
+    // Counters as JSON for CI, next to the BENCH_*.json artifacts.
+    if let Some(path) = args.get("spill-out") {
+        let j = taylorshift::util::json::Json::from_pairs(vec![
+            (
+                "spilled",
+                taylorshift::util::json::Json::Num(
+                    m.sessions_spilled.load(std::sync::atomic::Ordering::Relaxed) as f64,
+                ),
+            ),
+            ("restored", taylorshift::util::json::Json::Num(restored as f64)),
+            (
+                "failures",
+                taylorshift::util::json::Json::Num(
+                    m.spill_failures.load(std::sync::atomic::Ordering::Relaxed) as f64,
+                ),
+            ),
+            (
+                "restored_bytes",
+                taylorshift::util::json::Json::Num(
+                    m.restored_state_bytes
+                        .load(std::sync::atomic::Ordering::Relaxed) as f64,
+                ),
+            ),
+            (
+                "restore_p50_us",
+                taylorshift::util::json::Json::Num(
+                    m.restore_latency.quantile(0.5).as_micros() as f64,
+                ),
+            ),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        println!("  wrote spill/restore counters to {path}");
+    }
+    spilly
+        .close_stream(victim)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    spilly.close_stream(bump).map_err(|e| anyhow::anyhow!("{e}"))?;
+    drop(spilly);
+    let _ = std::fs::remove_dir_all(spill_dir);
 
     println!(
         "\nadaptive crossover N0(16)≈{:.0}: buckets ≤256 → direct, ≥512 → efficient",

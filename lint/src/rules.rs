@@ -8,8 +8,10 @@
 //!   accumulation (`+=`) must target an `f64` accumulator.
 //! - **R2 unguarded-div** (same scope): division by a moment/sum-named
 //!   denominator must be guarded (`guard_denom`, `.max(EPS)`).
-//! - **R3 panic** (`coordinator/engine.rs`, `decode/`, `model/`):
-//!   no `unwrap`/`expect`/`panic!` on the serving hot path.
+//! - **R3 panic** (`coordinator/engine.rs`, `decode/`, `model/` —
+//!   including the spill/restore tier in `model/spill.rs` and
+//!   `model/store.rs`): no `unwrap`/`expect`/`panic!` on the serving
+//!   hot path.
 //! - **R4 lock-across-channel** (`coordinator/`, `util/threadpool.rs`):
 //!   a Mutex/RwLock guard must not stay live across channel ops or
 //!   compute calls.
@@ -767,6 +769,18 @@ mod tests {
         let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
         assert_eq!(rules_of(&lint_source("coordinator/engine.rs", src)), ["R3"]);
         assert!(lint_source("coordinator/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_covers_the_session_spill_module() {
+        // The spill/restore tier handles untrusted on-disk bytes, so
+        // panics there are load-bearing: restore failures must stay
+        // typed errors. Pin the scope so a future path shuffle cannot
+        // silently drop it.
+        let src = "fn restore(p: &Path) -> State {\n    read_spill(p).unwrap()\n}\n";
+        assert_eq!(rules_of(&lint_source("model/spill.rs", src)), ["R3"]);
+        assert_eq!(rules_of(&lint_source("rust/src/model/spill.rs", src)), ["R3"]);
+        assert_eq!(rules_of(&lint_source("model/store.rs", src)), ["R3"]);
     }
 
     #[test]

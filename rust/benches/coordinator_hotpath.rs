@@ -37,13 +37,13 @@ fn main() {
 
     // 1. end-to-end single request, zero batching delay.
     let engine = Engine::start_with(
-        EngineConfig {
-            policy: BatchPolicy {
+        EngineConfig::builder()
+            .policy(BatchPolicy {
                 max_batch: 1,
                 max_delay: Duration::ZERO,
-            },
-            ..Default::default()
-        },
+            })
+            .build()
+            .expect("valid engine config"),
         || Ok(NullExecutor { sizes: vec![1, 8] }),
     )
     .unwrap();
@@ -64,13 +64,13 @@ fn main() {
 
     // 2. batched: 8 concurrent submitters per iteration.
     let engine = Engine::start_with(
-        EngineConfig {
-            policy: BatchPolicy {
+        EngineConfig::builder()
+            .policy(BatchPolicy {
                 max_batch: 8,
                 max_delay: Duration::from_millis(5),
-            },
-            ..Default::default()
-        },
+            })
+            .build()
+            .expect("valid engine config"),
         || Ok(NullExecutor { sizes: vec![1, 8] }),
     )
     .unwrap();

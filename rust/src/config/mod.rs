@@ -22,13 +22,20 @@ use std::time::Duration;
 ///   "n_layers": 2,
 ///   "d_ff": 128,
 ///   "layer_taus": [1.0, 1.2],
-///   "model_seed": 42
+///   "model_seed": 42,
+///   "spill_enabled": true,
+///   "spill_dir": "/var/tmp/taylorshift-spill",
+///   "spill_budget_mib": 256
 /// }
 /// ```
 ///
 /// Streaming-model knobs (`n_layers`, `d_ff`, `layer_taus`,
 /// `model_seed`) shape the whole-model decode path; a non-empty
-/// `layer_taus` must have exactly `n_layers` entries.
+/// `layer_taus` must have exactly `n_layers` entries. The `spill_*`
+/// knobs control the disk spill tier for evicted decode sessions;
+/// the parsed config goes through [`EngineConfig::validate`], so a
+/// `spill_dir` with spill disabled or a zero byte budget is rejected
+/// at load time.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -105,6 +112,17 @@ impl ServerConfig {
         if let Some(v) = j.get("max_sessions").and_then(|x| x.as_usize()) {
             engine.decode.max_sessions = v;
         }
+        // Spill tier: persist evicted decode state to disk and restore
+        // it on the next touch (see decode::SpillConfig).
+        if let Some(v) = j.get("spill_enabled").and_then(|x| x.as_bool()) {
+            engine.decode.spill.enabled = v;
+        }
+        if let Some(v) = j.get("spill_dir").and_then(|x| x.as_str()) {
+            engine.decode.spill.dir = Some(std::path::PathBuf::from(v));
+        }
+        if let Some(v) = j.get("spill_budget_mib").and_then(|x| x.as_f64()) {
+            engine.decode.spill.max_bytes = (v * 1024.0 * 1024.0) as u64;
+        }
         // Streaming-model architecture (see model::ModelConfig).
         if let Some(v) = j.get("n_layers").and_then(|x| x.as_usize()) {
             engine.decode.n_layers = v;
@@ -125,15 +143,9 @@ impl ServerConfig {
         if let Some(v) = j.get("model_seed").and_then(|x| x.as_f64()) {
             engine.decode.model_seed = v as u64;
         }
-        if !engine.decode.layer_taus.is_empty()
-            && engine.decode.layer_taus.len() != engine.decode.n_layers
-        {
-            return Err(anyhow!(
-                "layer_taus has {} entries but n_layers is {}",
-                engine.decode.layer_taus.len(),
-                engine.decode.n_layers
-            ));
-        }
+        // Same invariants hand-built configs get from
+        // `EngineConfig::builder()` — one validation path for both.
+        engine.validate().map_err(|e| anyhow!("{e}"))?;
         cfg.engine = engine;
         Ok(cfg)
     }
@@ -227,6 +239,34 @@ mod tests {
         assert!(ServerConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"layer_taus": [1.0, "x"]}"#).unwrap();
         assert!(ServerConfig::from_json(&j).is_err(), "non-numeric tau rejected");
+    }
+
+    #[test]
+    fn parses_spill_knobs() {
+        let j = Json::parse(
+            r#"{
+                "spill_enabled": true,
+                "spill_dir": "/tmp/ts-spill",
+                "spill_budget_mib": 4.0
+            }"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert!(c.engine.decode.spill.enabled);
+        assert_eq!(
+            c.engine.decode.spill.dir.as_deref(),
+            Some(std::path::Path::new("/tmp/ts-spill"))
+        );
+        assert_eq!(c.engine.decode.spill.max_bytes, 4 << 20);
+    }
+
+    #[test]
+    fn spill_dir_without_spill_rejected() {
+        let j = Json::parse(r#"{"spill_dir": "/tmp/ts-spill"}"#).unwrap();
+        let err = ServerConfig::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("spill"), "{err}");
+        let j = Json::parse(r#"{"spill_enabled": true, "spill_budget_mib": 0}"#).unwrap();
+        assert!(ServerConfig::from_json(&j).is_err(), "zero spill budget rejected");
     }
 
     #[test]

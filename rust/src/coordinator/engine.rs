@@ -16,15 +16,23 @@
 //! [`crate::model::StreamingModel`]. Each layer's state promotes
 //! KV→recurrent independently when the prefix crosses the selector's
 //! N₀. Decode steps ride a priority lane mixed ahead of due prefill
-//! batches each cycle; a session LRU-evicted under the memory budget
-//! answers its next step with [`RequestError::NeedsReprefill`].
+//! batches each cycle. `submit_stream` returns a typed
+//! [`SessionHandle`] (id + trace); decode/close accept any
+//! [`AsSessionId`], so raw `u64` ids keep working one release.
+//!
+//! Under memory pressure the store spills LRU sessions to disk when
+//! `decode.spill` is enabled and restores them transparently on the
+//! next step; [`RequestError::NeedsReprefill`] only surfaces when
+//! spill is off, its budget is exhausted, or a spill file fails
+//! validation.
 
 use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
 use crate::coordinator::batcher::{BatchPolicy, DecodeLane, DynamicBatcher, PendingBatch};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{
-    DecodeRequest, DecodeResponse, InferRequest, InferResponse, RequestError, StreamStats,
+    AsSessionId, DecodeRequest, DecodeResponse, InferRequest, InferResponse, RequestError,
+    SessionHandle, StreamStats,
 };
 use crate::coordinator::router::{Route, Router};
 use crate::data::batch::Buckets;
@@ -166,9 +174,172 @@ impl Default for EngineConfig {
     }
 }
 
+impl EngineConfig {
+    /// Start a validated config build from the defaults. Prefer this
+    /// over a struct literal: `build()` rejects configurations the
+    /// engine would otherwise accept and then misbehave on (zero byte
+    /// budgets, a spill dir with spill disabled, ...).
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder {
+            cfg: Self::default(),
+        }
+    }
+
+    /// Check the invariants `build()` enforces. Public so config
+    /// loaders (`config::ServerConfig`) can validate parsed files the
+    /// same way hand-built configs are.
+    pub fn validate(&self) -> Result<(), EngineConfigError> {
+        if self.buckets.is_empty() {
+            return Err(EngineConfigError::EmptyBuckets);
+        }
+        if self.decode.max_sessions == 0 {
+            return Err(EngineConfigError::ZeroSessions);
+        }
+        if self.decode.max_session_bytes == 0 {
+            return Err(EngineConfigError::ZeroByteBudget {
+                what: "decode.max_session_bytes",
+            });
+        }
+        if self.decode.spill.enabled && self.decode.spill.max_bytes == 0 {
+            return Err(EngineConfigError::ZeroByteBudget {
+                what: "decode.spill.max_bytes",
+            });
+        }
+        if self.decode.spill.dir.is_some() && !self.decode.spill.enabled {
+            return Err(EngineConfigError::SpillDirWithoutSpill);
+        }
+        if !self.decode.layer_taus.is_empty() && self.decode.layer_taus.len() != self.decode.n_layers
+        {
+            return Err(EngineConfigError::LayerTausMismatch {
+                expected: self.decode.n_layers,
+                got: self.decode.layer_taus.len(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Why [`EngineConfig::validate`] rejected a configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineConfigError {
+    /// A byte budget was explicitly zero — the engine would evict (or
+    /// refuse to spill) every session immediately. Names the knob.
+    ZeroByteBudget { what: &'static str },
+    /// A spill directory was configured but spill is disabled; the
+    /// dir would silently never be used.
+    SpillDirWithoutSpill,
+    /// `decode.max_sessions` of zero can hold no streams.
+    ZeroSessions,
+    /// No sequence buckets: the router could serve nothing.
+    EmptyBuckets,
+    /// `decode.layer_taus` was set but does not cover every layer.
+    LayerTausMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for EngineConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ZeroByteBudget { what } => {
+                write!(f, "byte budget {what} must be nonzero")
+            }
+            Self::SpillDirWithoutSpill => {
+                write!(f, "spill dir configured but spill is disabled")
+            }
+            Self::ZeroSessions => write!(f, "decode.max_sessions must be nonzero"),
+            Self::EmptyBuckets => write!(f, "no sequence buckets configured"),
+            Self::LayerTausMismatch { expected, got } => {
+                write!(f, "layer_taus covers {got} layers, model has {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineConfigError {}
+
+/// Validating builder for [`EngineConfig`]; see [`EngineConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.cfg.buckets = buckets;
+        self
+    }
+
+    pub fn head_dim(mut self, d: usize) -> Self {
+        self.cfg.head_dim = d;
+        self
+    }
+
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn queue_limit(mut self, limit: usize) -> Self {
+        self.cfg.queue_limit = limit;
+        self
+    }
+
+    pub fn forced_variant(mut self, v: AttentionVariant) -> Self {
+        self.cfg.forced_variant = Some(v);
+        self
+    }
+
+    pub fn selector(mut self, selector: Selector) -> Self {
+        self.cfg.selector = selector;
+        self
+    }
+
+    /// Replace the whole decode sub-config (heads, layers, budgets).
+    pub fn decode(mut self, decode: DecodeConfig) -> Self {
+        self.cfg.decode = decode;
+        self
+    }
+
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.cfg.decode.max_sessions = n;
+        self
+    }
+
+    pub fn session_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.decode.max_session_bytes = bytes;
+        self
+    }
+
+    /// Turn the disk spill tier on or off (off by default).
+    pub fn spill_enabled(mut self, enabled: bool) -> Self {
+        self.cfg.decode.spill.enabled = enabled;
+        self
+    }
+
+    /// Directory for spill files. Setting a dir does NOT enable spill;
+    /// `build()` rejects a dir with spill disabled so the intent is
+    /// always explicit.
+    pub fn spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.decode.spill.dir = Some(dir.into());
+        self
+    }
+
+    /// On-disk byte budget for the spill tier (defaults to
+    /// [`crate::decode::SpillConfig::DEFAULT_MAX_BYTES`]).
+    pub fn spill_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.decode.spill.max_bytes = bytes;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<EngineConfig, EngineConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
 enum Msg {
     Infer(InferRequest, Sender<Result<InferResponse, RequestError>>),
-    StreamOpen(u64, Sender<Result<u64, RequestError>>),
+    StreamOpen(u64, Sender<Result<SessionHandle, RequestError>>),
     Decode(DecodeRequest, DecodeResponder),
     StreamClose(u64, Sender<Result<StreamStats, RequestError>>),
     Shutdown,
@@ -275,10 +446,12 @@ impl Engine {
         rx.recv().map_err(|_| RequestError::Shutdown)?
     }
 
-    /// Open a streaming decode session; returns its id. The session is
-    /// resident on the engine thread until `close_stream` or LRU
-    /// eviction under the configured memory budget.
-    pub fn submit_stream(&self) -> Result<u64, RequestError> {
+    /// Open a streaming decode session; returns its typed
+    /// [`SessionHandle`] (session id + observability trace id). The
+    /// session is resident on the engine thread until `close_stream`,
+    /// or it is spilled/LRU-evicted under the configured memory
+    /// budget.
+    pub fn submit_stream(&self) -> Result<SessionHandle, RequestError> {
         let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         self.tx
@@ -290,9 +463,11 @@ impl Engine {
     /// Submit one decode step (the next token's embedding row,
     /// `[1, d_model]`); the returned receiver yields the final-block
     /// output after the token has passed through every layer.
+    /// `session` is the [`SessionHandle`] from `submit_stream` (raw
+    /// `u64` ids still work one release via [`AsSessionId`]).
     pub fn submit_decode(
         &self,
-        session: u64,
+        session: impl AsSessionId,
         token: Tensor,
     ) -> Result<Receiver<Result<DecodeResponse, RequestError>>, RequestError> {
         if token.shape() != self.decode_shape.as_slice() {
@@ -303,22 +478,32 @@ impl Engine {
         }
         let (resp_tx, resp_rx) = channel();
         self.tx
-            .send(Msg::Decode(DecodeRequest::new(session, token), resp_tx))
+            .send(Msg::Decode(
+                DecodeRequest::new(session.session_id(), token),
+                resp_tx,
+            ))
             .map_err(|_| RequestError::Shutdown)?;
         Ok(resp_rx)
     }
 
     /// Submit a decode step and block for its output.
-    pub fn decode_step(&self, session: u64, token: Tensor) -> Result<DecodeResponse, RequestError> {
+    pub fn decode_step(
+        &self,
+        session: impl AsSessionId,
+        token: Tensor,
+    ) -> Result<DecodeResponse, RequestError> {
         let rx = self.submit_decode(session, token)?;
         rx.recv().map_err(|_| RequestError::Shutdown)?
     }
 
-    /// Close a stream and free its state; returns lifetime stats.
-    pub fn close_stream(&self, session: u64) -> Result<StreamStats, RequestError> {
+    /// Close a stream and free its state (including any spill file);
+    /// returns lifetime stats. Closing a spilled or evicted stream
+    /// succeeds with `stats.evicted == true` reporting what was known
+    /// at eviction time.
+    pub fn close_stream(&self, session: impl AsSessionId) -> Result<StreamStats, RequestError> {
         let (resp_tx, resp_rx) = channel();
         self.tx
-            .send(Msg::StreamClose(session, resp_tx))
+            .send(Msg::StreamClose(session.session_id(), resp_tx))
             .map_err(|_| RequestError::Shutdown)?;
         resp_rx.recv().map_err(|_| RequestError::Shutdown)?
     }
@@ -444,11 +629,10 @@ fn engine_loop<E: BatchExecutor>(
                 Msg::StreamOpen(id, responder) => {
                     let evicted = store.open(id);
                     metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .sessions_evicted
-                        .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+                    record_evictions(&evicted, &metrics);
                     update_session_gauges(&store, &metrics);
-                    let _ = responder.send(Ok(id));
+                    let handle = SessionHandle::new(id, store.trace_of(id).unwrap_or(0));
+                    let _ = responder.send(Ok(handle));
                 }
                 Msg::Decode(req, responder) => {
                     let trace = store.trace_of(req.session).unwrap_or(0);
@@ -474,6 +658,7 @@ fn engine_loop<E: BatchExecutor>(
                                 bytes: s.bytes,
                                 promoted_at: s.promoted_at,
                                 trace: s.trace,
+                                evicted: s.evicted,
                             })
                         }
                         None => Err(RequestError::UnknownSession { id }),
@@ -524,6 +709,17 @@ fn engine_loop<E: BatchExecutor>(
     crate::obs::flush();
 }
 
+/// Count an eviction batch: every victim increments `sessions_evicted`;
+/// the ones whose state survived to a spill file also increment
+/// `sessions_spilled`.
+fn record_evictions(evicted: &[crate::model::Eviction], metrics: &Metrics) {
+    metrics
+        .sessions_evicted
+        .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+    let spilled = evicted.iter().filter(|e| e.spilled).count() as u64;
+    metrics.sessions_spilled.fetch_add(spilled, Ordering::Relaxed);
+}
+
 fn update_session_gauges(store: &SessionStore, metrics: &Metrics) {
     metrics
         .sessions_resident
@@ -531,6 +727,12 @@ fn update_session_gauges(store: &SessionStore, metrics: &Metrics) {
     metrics
         .session_bytes
         .store(store.resident_bytes(), Ordering::Relaxed);
+    metrics
+        .sessions_spilled_resident
+        .store(store.spilled_sessions() as u64, Ordering::Relaxed);
+    metrics
+        .spill_file_bytes
+        .store(store.spilled_bytes(), Ordering::Relaxed);
     let (kv, recurrent) = store.layer_occupancy();
     for (gauge, count) in metrics.layer_kv_sessions.iter().zip(kv) {
         gauge.store(count, Ordering::Relaxed);
@@ -568,9 +770,14 @@ fn run_decode(
                 .filter(|l| l.promoted)
                 .count() as u64;
             metrics.promotions.fetch_add(promoted_layers, Ordering::Relaxed);
-            metrics
-                .sessions_evicted
-                .fetch_add(outcome.evicted.len() as u64, Ordering::Relaxed);
+            record_evictions(&outcome.evicted, metrics);
+            if let Some(restore) = &outcome.restored {
+                metrics.sessions_restored.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .restored_state_bytes
+                    .fetch_add(restore.bytes, Ordering::Relaxed);
+                metrics.restore_latency.record(restore.elapsed);
+            }
             if promoted_layers > 0 {
                 recorder::record_event(EventKind::Promote, trace, req.session, promoted_layers);
             }
@@ -591,15 +798,28 @@ fn run_decode(
         Err(miss) => {
             metrics.decode_misses.fetch_add(1, Ordering::Relaxed);
             update_session_gauges(store, metrics);
-            let code = match miss {
-                StepMiss::Evicted => recorder::ERR_NEEDS_REPREFILL,
-                StepMiss::Unknown => recorder::ERR_UNKNOWN_SESSION,
+            // A failed restore surfaces as NeedsReprefill at the API —
+            // the state is gone either way — but is counted and
+            // flight-recorded separately so operators can tell
+            // corruption from ordinary memory pressure.
+            let (code, err) = match miss {
+                StepMiss::Evicted => (
+                    recorder::ERR_NEEDS_REPREFILL,
+                    RequestError::NeedsReprefill { id: req.session },
+                ),
+                StepMiss::Unknown => (
+                    recorder::ERR_UNKNOWN_SESSION,
+                    RequestError::UnknownSession { id: req.session },
+                ),
+                StepMiss::SpillFailed(_) => {
+                    metrics.spill_failures.fetch_add(1, Ordering::Relaxed);
+                    (
+                        recorder::ERR_SPILL_CORRUPT,
+                        RequestError::NeedsReprefill { id: req.session },
+                    )
+                }
             };
             last_error.record(code, trace, req.session);
-            let err = match miss {
-                StepMiss::Evicted => RequestError::NeedsReprefill { id: req.session },
-                StepMiss::Unknown => RequestError::UnknownSession { id: req.session },
-            };
             crate::obs::flush();
             let _ = responder.send(Err(err));
         }
@@ -1153,6 +1373,8 @@ mod tests {
         assert_eq!(stats.tokens, steps);
         assert_eq!(stats.branches, vec![AttentionVariant::Efficient; n_layers]);
         assert_eq!(stats.promoted_at, vec![Some(8); n_layers]);
+        assert!(!stats.evicted, "closed while resident");
+        assert_eq!(stats.trace, sid.trace(), "handle carries the stream trace");
         assert_eq!(m.streams_closed.load(Ordering::Relaxed), 1);
         assert_eq!(m.sessions_resident.load(Ordering::Relaxed), 0);
         // Double close and post-close decode both miss as Unknown
@@ -1170,10 +1392,11 @@ mod tests {
 
     #[test]
     fn decode_shape_validated_at_submit() {
-        // Default config: heads=4, head_dim=16 ⇒ d_model=64.
+        // Default config: heads=4, head_dim=16 ⇒ d_model=64. A raw u64
+        // session id still names a session (one-release compat shim).
         let (engine, _) = mock_engine(EngineConfig::default());
         let bad = Tensor::randn(&[2, 16], 1);
-        let err = engine.submit_decode(1, bad).unwrap_err();
+        let err = engine.submit_decode(1u64, bad).unwrap_err();
         assert!(matches!(
             err,
             RequestError::BadDecodeShape {
@@ -1200,12 +1423,124 @@ mod tests {
         // s1 was evicted to make room for s2: its state is gone and the
         // caller must re-prefill (typed error, not a silent fresh state).
         let err = engine.decode_step(s1, mk(4)).unwrap_err();
-        assert_eq!(err, RequestError::NeedsReprefill { id: s1 });
+        assert_eq!(err, RequestError::NeedsReprefill { id: s1.id() });
         engine.decode_step(s2, mk(7)).unwrap();
         let m = engine.metrics();
         assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 1);
         assert_eq!(m.streams_opened.load(Ordering::Relaxed), 2);
         assert_eq!(m.decode_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn builder_validates_config() {
+        assert!(EngineConfig::builder().build().is_ok());
+        assert_eq!(
+            EngineConfig::builder().buckets(vec![]).build().unwrap_err(),
+            EngineConfigError::EmptyBuckets
+        );
+        assert_eq!(
+            EngineConfig::builder().max_sessions(0).build().unwrap_err(),
+            EngineConfigError::ZeroSessions
+        );
+        assert_eq!(
+            EngineConfig::builder()
+                .session_budget_bytes(0)
+                .build()
+                .unwrap_err(),
+            EngineConfigError::ZeroByteBudget {
+                what: "decode.max_session_bytes"
+            }
+        );
+        assert_eq!(
+            EngineConfig::builder()
+                .spill_enabled(true)
+                .spill_budget_bytes(0)
+                .build()
+                .unwrap_err(),
+            EngineConfigError::ZeroByteBudget {
+                what: "decode.spill.max_bytes"
+            }
+        );
+        assert_eq!(
+            EngineConfig::builder().spill_dir("/tmp/x").build().unwrap_err(),
+            EngineConfigError::SpillDirWithoutSpill
+        );
+        let ok = EngineConfig::builder()
+            .spill_enabled(true)
+            .spill_dir("/tmp/x")
+            .build()
+            .unwrap();
+        assert!(ok.decode.spill.enabled);
+        assert!(matches!(
+            EngineConfig::builder()
+                .decode(DecodeConfig {
+                    layer_taus: vec![1.0],
+                    ..DecodeConfig::default()
+                })
+                .build(),
+            Err(EngineConfigError::LayerTausMismatch {
+                expected: 2,
+                got: 1
+            })
+        ));
+        assert!(EngineConfigError::SpillDirWithoutSpill
+            .to_string()
+            .contains("spill"));
+        assert!(EngineConfigError::ZeroByteBudget {
+            what: "decode.spill.max_bytes"
+        }
+        .to_string()
+        .contains("decode.spill.max_bytes"));
+    }
+
+    #[test]
+    fn stream_spills_and_restores_transparently() {
+        let dir =
+            std::env::temp_dir().join(format!("ts-engine-spill-{}", std::process::id()));
+        let cfg = EngineConfig::builder()
+            .decode(DecodeConfig {
+                heads: 1,
+                max_sessions: 1,
+                ..DecodeConfig::default()
+            })
+            .spill_enabled(true)
+            .spill_dir(dir.clone())
+            .build()
+            .unwrap();
+        let (engine, _) = mock_engine(cfg);
+        let mk = |seed| Tensor::randn(&[1, 16], seed);
+
+        let s1 = engine.submit_stream().unwrap();
+        engine.decode_step(s1, mk(1)).unwrap();
+        let s2 = engine.submit_stream().unwrap();
+        let m = engine.metrics();
+        // s1 was pushed out by s2 — but to disk, not destroyed.
+        assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_spilled.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_spilled_resident.load(Ordering::Relaxed), 1);
+        assert!(m.spill_file_bytes.load(Ordering::Relaxed) > 0);
+
+        // Touching s1 restores it transparently (and spills s2 in turn):
+        // the step continues exactly where the stream left off.
+        let resp = engine.decode_step(s1, mk(2)).unwrap();
+        assert_eq!(resp.step, 2, "restored stream continues its prefix");
+        assert_eq!(resp.trace, s1.trace(), "trace survives the round trip");
+        assert_eq!(m.sessions_restored.load(Ordering::Relaxed), 1);
+        assert!(m.restored_state_bytes.load(Ordering::Relaxed) > 0);
+        assert_eq!(m.restore_latency.count(), 1);
+        assert_eq!(m.decode_misses.load(Ordering::Relaxed), 0, "no NeedsReprefill");
+
+        // Closing the now-spilled s2 succeeds with what was known and
+        // cleans up its spill file.
+        let stats = engine.close_stream(s2).unwrap();
+        assert!(stats.evicted, "closed from the spilled state");
+        assert_eq!(stats.tokens, 0);
+        assert_eq!(m.sessions_spilled_resident.load(Ordering::Relaxed), 0);
+        assert_eq!(m.spill_file_bytes.load(Ordering::Relaxed), 0);
+        let stats = engine.close_stream(s1).unwrap();
+        assert!(!stats.evicted);
+        drop(engine);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

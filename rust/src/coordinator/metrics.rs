@@ -200,15 +200,31 @@ pub struct Metrics {
     pub promotions: AtomicU64,
     /// Sessions LRU-evicted under the memory budget.
     pub sessions_evicted: AtomicU64,
+    /// Evictions whose state survived to a spill file (subset of
+    /// `sessions_evicted`).
+    pub sessions_spilled: AtomicU64,
+    /// Spilled sessions transparently restored on touch.
+    pub sessions_restored: AtomicU64,
+    /// Restores that failed spill-file validation (checksum/version/
+    /// shape) and degraded to a hard eviction.
+    pub spill_failures: AtomicU64,
     /// Gauge: sessions currently resident in the store.
     pub sessions_resident: AtomicU64,
     /// Gauge: bytes held by resident session state (all layers summed).
     pub session_bytes: AtomicU64,
+    /// Gauge: sessions currently parked in spill files.
+    pub sessions_spilled_resident: AtomicU64,
+    /// Gauge: on-disk bytes held by spill files.
+    pub spill_file_bytes: AtomicU64,
+    /// Cumulative resident bytes rehydrated by restores.
+    pub restored_state_bytes: AtomicU64,
     /// Per-token decode latency (submit → response).
     pub decode_latency: LatencyHistogram,
     /// Whole-model per-token step time (store.step only, excluding
     /// queueing).
     pub model_step_time: LatencyHistogram,
+    /// Spill-file restore latency (read + validate + decode).
+    pub restore_latency: LatencyHistogram,
     /// Gauge per layer: resident sessions served on the KV branch.
     pub layer_kv_sessions: Vec<AtomicU64>,
     /// Gauge per layer: resident sessions served recurrent.
@@ -289,6 +305,9 @@ impl Metrics {
         register_counter(&mut out, "decode_misses_total", &self.decode_misses);
         register_counter(&mut out, "promotions_total", &self.promotions);
         register_counter(&mut out, "sessions_evicted_total", &self.sessions_evicted);
+        register_counter(&mut out, "sessions_spilled_total", &self.sessions_spilled);
+        register_counter(&mut out, "sessions_restored_total", &self.sessions_restored);
+        register_counter(&mut out, "spill_failures_total", &self.spill_failures);
         register_gauge_f(&mut out, "batch_occupancy_total", self.mean_batch_occupancy());
         register_gauge(
             &mut out,
@@ -307,6 +326,24 @@ impl Metrics {
             "session_state_bytes",
             None,
             self.session_bytes.load(Ordering::Relaxed),
+        );
+        register_gauge(
+            &mut out,
+            "spilled_sessions_total",
+            None,
+            self.sessions_spilled_resident.load(Ordering::Relaxed),
+        );
+        register_gauge(
+            &mut out,
+            "spill_file_bytes",
+            None,
+            self.spill_file_bytes.load(Ordering::Relaxed),
+        );
+        register_gauge(
+            &mut out,
+            "restored_state_bytes",
+            None,
+            self.restored_state_bytes.load(Ordering::Relaxed),
         );
         for (l, g) in self.layer_kv_sessions.iter().enumerate() {
             register_gauge(
@@ -329,6 +366,7 @@ impl Metrics {
         register_histogram(&mut out, "exec_time_us", &self.exec_time);
         register_histogram(&mut out, "decode_latency_us", &self.decode_latency);
         register_histogram(&mut out, "model_step_time_us", &self.model_step_time);
+        register_histogram(&mut out, "restore_latency_us", &self.restore_latency);
         out
     }
 
@@ -336,13 +374,14 @@ impl Metrics {
     /// under their registered base names — the native-histogram
     /// surface the Prometheus renderer consumes. Kept consistent with
     /// `export()` by a unit test.
-    pub fn histogram_list(&self) -> [(&'static str, &LatencyHistogram); 5] {
+    pub fn histogram_list(&self) -> [(&'static str, &LatencyHistogram); 6] {
         [
             ("request_latency_us", &self.latency),
             ("queue_wait_us", &self.queue_wait),
             ("exec_time_us", &self.exec_time),
             ("decode_latency_us", &self.decode_latency),
             ("model_step_time_us", &self.model_step_time),
+            ("restore_latency_us", &self.restore_latency),
         ]
     }
 
@@ -355,6 +394,7 @@ impl Metrics {
              variants: direct={} efficient={} softmax={}\n\
              decode: steps={} misses={} promotions={}\n\
              sessions: opened={} closed={} evicted={} resident={} bytes={}\n\
+             spill: spilled={} restored={} failures={} on_disk={} disk_bytes={}\n\
              layers: kv={:?} recurrent={:?}\n\
              latency: mean={:?} p50={:?} p99={:?}\n\
              queue_wait: mean={:?} p99={:?}\n\
@@ -378,6 +418,11 @@ impl Metrics {
             self.sessions_evicted.load(Ordering::Relaxed),
             self.sessions_resident.load(Ordering::Relaxed),
             self.session_bytes.load(Ordering::Relaxed),
+            self.sessions_spilled.load(Ordering::Relaxed),
+            self.sessions_restored.load(Ordering::Relaxed),
+            self.spill_failures.load(Ordering::Relaxed),
+            self.sessions_spilled_resident.load(Ordering::Relaxed),
+            self.spill_file_bytes.load(Ordering::Relaxed),
             Self::gauge_vec(&self.layer_kv_sessions),
             Self::gauge_vec(&self.layer_recurrent_sessions),
             self.latency.mean(),
@@ -452,6 +497,17 @@ impl Metrics {
                 ]),
             ),
             (
+                "spill",
+                Json::from_pairs(vec![
+                    ("spilled", n(&self.sessions_spilled)),
+                    ("restored", n(&self.sessions_restored)),
+                    ("failures", n(&self.spill_failures)),
+                    ("on_disk", n(&self.sessions_spilled_resident)),
+                    ("disk_bytes", n(&self.spill_file_bytes)),
+                    ("restored_bytes", n(&self.restored_state_bytes)),
+                ]),
+            ),
+            (
                 "layers",
                 Json::Arr(
                     self.layer_kv_sessions
@@ -471,6 +527,7 @@ impl Metrics {
             ("exec", hist(&self.exec_time)),
             ("decode_latency", hist(&self.decode_latency)),
             ("model_step", hist(&self.model_step_time)),
+            ("restore_latency", hist(&self.restore_latency)),
         ])
     }
 }
@@ -678,6 +735,52 @@ mod tests {
         assert_eq!(find("layer_kv_sessions_total", "", Some(1)), Some(3.0));
         assert_eq!(find("decode_latency_us", "count", None), Some(1.0));
         assert!(find("decode_latency_us", "p99", None).unwrap_or(0.0) >= 512.0);
+    }
+
+    #[test]
+    fn export_reports_spill_series() {
+        let m = Metrics::new();
+        m.sessions_spilled.store(3, Ordering::Relaxed);
+        m.sessions_restored.store(2, Ordering::Relaxed);
+        m.spill_failures.store(1, Ordering::Relaxed);
+        m.sessions_spilled_resident.store(1, Ordering::Relaxed);
+        m.spill_file_bytes.store(2048, Ordering::Relaxed);
+        m.restored_state_bytes.store(512, Ordering::Relaxed);
+        m.restore_latency.record(Duration::from_micros(120));
+        let samples = m.export();
+        let find = |name: &str, stat: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.stat == stat)
+                .map(|s| (s.value, s.kind))
+        };
+        assert_eq!(
+            find("sessions_spilled_total", ""),
+            Some((3.0, SampleKind::Counter))
+        );
+        assert_eq!(
+            find("sessions_restored_total", ""),
+            Some((2.0, SampleKind::Counter))
+        );
+        assert_eq!(
+            find("spill_failures_total", ""),
+            Some((1.0, SampleKind::Counter))
+        );
+        assert_eq!(
+            find("spilled_sessions_total", ""),
+            Some((1.0, SampleKind::Gauge))
+        );
+        assert_eq!(find("spill_file_bytes", ""), Some((2048.0, SampleKind::Gauge)));
+        assert_eq!(
+            find("restored_state_bytes", ""),
+            Some((512.0, SampleKind::Gauge))
+        );
+        assert_eq!(
+            find("restore_latency_us", "count"),
+            Some((1.0, SampleKind::Histogram))
+        );
+        let s = m.summary();
+        assert!(s.contains("spill: spilled=3 restored=2 failures=1"), "{s}");
     }
 
     #[test]

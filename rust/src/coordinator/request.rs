@@ -2,6 +2,69 @@
 
 use std::time::Instant;
 
+/// Typed handle to an open decode stream: the session id plus the
+/// observability trace id minted at open. Returned by
+/// `Engine::submit_stream` and accepted (via [`AsSessionId`]) by
+/// `decode_step`/`close_stream`, so trace correlation needs no
+/// separate lookup. Dropping it unused is almost certainly a leaked
+/// stream — hence `#[must_use]`.
+#[must_use = "a SessionHandle is the only reference to an open stream; close it or step it"]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionHandle {
+    id: u64,
+    trace: u64,
+}
+
+impl SessionHandle {
+    /// Constructed by the engine when a stream opens.
+    pub(crate) fn new(id: u64, trace: u64) -> Self {
+        Self { id, trace }
+    }
+
+    /// The stream's session id (what the store keys on).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The stream's observability trace id — matches every span and
+    /// flight-recorder event the stream produces.
+    pub fn trace(&self) -> u64 {
+        self.trace
+    }
+}
+
+impl std::fmt::Display for SessionHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session {} (trace {})", self.id, self.trace)
+    }
+}
+
+/// Anything that names a decode session. Engine decode/close APIs take
+/// `impl AsSessionId`, so callers pass the typed [`SessionHandle`];
+/// the `u64` impl is a one-release compatibility shim for older
+/// callers that stored raw ids (examples/tests) — prefer the handle.
+pub trait AsSessionId {
+    fn session_id(&self) -> u64;
+}
+
+impl AsSessionId for SessionHandle {
+    fn session_id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl AsSessionId for &SessionHandle {
+    fn session_id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl AsSessionId for u64 {
+    fn session_id(&self) -> u64 {
+        *self
+    }
+}
+
 /// A classification request: one token sequence.
 #[derive(Clone, Debug)]
 pub struct InferRequest {
@@ -105,6 +168,9 @@ pub struct StreamStats {
     pub promoted_at: Vec<Option<usize>>,
     /// The stream's trace ID, for correlating with span records.
     pub trace: u64,
+    /// True iff the stream was closed while evicted or spilled; the
+    /// stats then report what was known at eviction time.
+    pub evicted: bool,
 }
 
 /// Why a request was rejected or failed.
@@ -174,6 +240,17 @@ mod tests {
             latency: std::time::Duration::from_millis(1),
         };
         assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn session_handle_carries_id_and_trace() {
+        let h = SessionHandle::new(7, 99);
+        assert_eq!(h.id(), 7);
+        assert_eq!(h.trace(), 99);
+        assert_eq!(h.session_id(), 7);
+        assert_eq!((&h).session_id(), 7);
+        assert_eq!(7u64.session_id(), 7, "u64 shim still names a session");
+        assert!(h.to_string().contains("trace 99"));
     }
 
     #[test]

@@ -9,7 +9,12 @@
 //! stored raw.
 
 use crate::analysis::memory;
+use crate::util::bytes::{ByteReader, ByteWriter, CodecError};
 use crate::util::numeric::guard_denom;
+
+/// Upper bound on decoded slice lengths: spill files are written by
+/// this process, so anything past ~1 GiB of entries is corruption.
+const MAX_DECODE_ENTRIES: usize = 1 << 28;
 
 /// Cached prefix for one attention head on the direct branch.
 #[derive(Clone, Debug)]
@@ -114,6 +119,32 @@ impl KvCache {
         self.append(k, v);
         self.query(q)
     }
+
+    /// Serialize the cache bit-exactly (spill path). Keys are already
+    /// ℓ2-normalized in storage, so the round trip reproduces the
+    /// exact in-memory bits — no re-normalization on restore.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u32(self.d as u32);
+        w.put_f64(self.tau);
+        w.put_f32_slice(&self.keys);
+        w.put_f32_slice(&self.values);
+    }
+
+    /// Inverse of [`KvCache::encode`]; validates structure but trusts
+    /// the float bits (the spill layer checksums the whole payload).
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self, CodecError> {
+        let d = r.get_u32()? as usize;
+        if d == 0 {
+            return Err(CodecError::Invalid { what: "kv head dim" });
+        }
+        let tau = r.get_f64()?;
+        let keys = r.get_f32_vec(MAX_DECODE_ENTRIES)?;
+        let values = r.get_f32_vec(MAX_DECODE_ENTRIES)?;
+        if keys.len() != values.len() || keys.len() % d != 0 {
+            return Err(CodecError::Invalid { what: "kv row shape" });
+        }
+        Ok(Self { d, tau, keys, values })
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +186,42 @@ mod tests {
             cache.append(&k, &v);
             assert_eq!(cache.state_bytes(), (2 * t * d * 4) as u64);
         }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let (n, d, tau) = (13usize, 5usize, 0.7f32);
+        let q = Tensor::randn(&[n, d], 30);
+        let k = Tensor::randn(&[n, d], 31);
+        let v = Tensor::randn(&[n, d], 32);
+        let mut cache = KvCache::new(d, tau);
+        for t in 0..n {
+            cache.append(k.row(t), v.row(t));
+        }
+        let mut w = crate::util::bytes::ByteWriter::new();
+        cache.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bytes::ByteReader::new(&bytes);
+        let back = KvCache::decode(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.len(), cache.len());
+        let a = cache.query(q.row(n - 1));
+        let b = back.query(q.row(n - 1));
+        let eq = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "restored query must be bit-exact");
+    }
+
+    #[test]
+    fn decode_rejects_row_shape_mismatch() {
+        let mut cache = KvCache::new(4, 1.0);
+        cache.append(&[1.0; 4], &[2.0; 4]);
+        let mut w = crate::util::bytes::ByteWriter::new();
+        cache.encode(&mut w);
+        let mut bytes = w.into_bytes();
+        // Corrupt the head dim so rows no longer divide evenly.
+        bytes[0] = 3;
+        let mut r = crate::util::bytes::ByteReader::new(&bytes);
+        assert!(KvCache::decode(&mut r).is_err());
     }
 
     #[test]

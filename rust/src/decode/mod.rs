@@ -38,4 +38,4 @@ pub mod session;
 
 pub use kv::KvCache;
 pub use recurrent::RecurrentState;
-pub use session::{DecodeConfig, DecodeSession, StepResult};
+pub use session::{DecodeConfig, DecodeSession, SpillConfig, StepResult};

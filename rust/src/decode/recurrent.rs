@@ -22,6 +22,7 @@
 //! lose the parity-with-recompute guarantee to summation error.
 
 use crate::analysis::memory;
+use crate::util::bytes::{ByteReader, ByteWriter, CodecError};
 use crate::util::numeric::guard_denom;
 
 /// Running-moment state for one attention head on the efficient branch.
@@ -154,6 +155,39 @@ impl RecurrentState {
         self.append(k, v);
         self.query(q)
     }
+
+    /// Serialize the moment accumulators bit-exactly (spill path).
+    /// The f64 moments ARE the parity guarantee for long prefixes, so
+    /// they go to disk as raw bit patterns, never rounded through f32.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u32(self.d as u32);
+        w.put_u64(self.len as u64);
+        w.put_f64(self.alpha);
+        w.put_f64(self.tau);
+        w.put_f64_slice(&self.m0);
+        w.put_f64_slice(&self.m1);
+        w.put_f64_slice(&self.m2);
+    }
+
+    /// Inverse of [`RecurrentState::encode`]; validates the moment
+    /// shapes against the head dim before accepting the state.
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self, CodecError> {
+        let d = r.get_u32()? as usize;
+        if d == 0 || d > 1 << 12 {
+            return Err(CodecError::Invalid { what: "recurrent head dim" });
+        }
+        let len = r.get_u64()? as usize;
+        let alpha = r.get_f64()?;
+        let tau = r.get_f64()?;
+        let w = d + 1;
+        let m0 = r.get_f64_vec(w)?;
+        let m1 = r.get_f64_vec(d * w)?;
+        let m2 = r.get_f64_vec(d * d * w)?;
+        if m0.len() != w || m1.len() != d * w || m2.len() != d * d * w {
+            return Err(CodecError::Invalid { what: "moment shapes" });
+        }
+        Ok(Self { d, len, alpha, tau, m0, m1, m2 })
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +232,42 @@ mod tests {
         assert_eq!(state.state_bytes(), bytes0);
         // (d+1)(d²+d+1) f64 entries.
         assert_eq!(bytes0, 17 * (256 + 16 + 1) * 8);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let (n, d, tau) = (37usize, 6usize, 1.1f32);
+        let q = Tensor::randn(&[n, d], 40);
+        let k = Tensor::randn(&[n, d], 41);
+        let v = Tensor::randn(&[n, d], 42);
+        let mut state = RecurrentState::new(d, tau);
+        for t in 0..n {
+            state.append(k.row(t), v.row(t));
+        }
+        let mut w = crate::util::bytes::ByteWriter::new();
+        state.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bytes::ByteReader::new(&bytes);
+        let back = RecurrentState::decode(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.len(), state.len());
+        // Moments are f64 accumulators — the round trip must preserve
+        // every bit, and therefore every future query result.
+        let a = state.query(q.row(n - 1));
+        let b = back.query(q.row(n - 1));
+        let eq = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "restored query must be bit-exact");
+    }
+
+    #[test]
+    fn decode_rejects_truncated_moments() {
+        let mut state = RecurrentState::new(4, 1.0);
+        state.append(&[1.0; 4], &[2.0; 4]);
+        let mut w = crate::util::bytes::ByteWriter::new();
+        state.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bytes::ByteReader::new(&bytes[..bytes.len() - 9]);
+        assert!(RecurrentState::decode(&mut r).is_err());
     }
 
     #[test]

@@ -19,6 +19,38 @@ use super::kv::KvCache;
 use super::recurrent::RecurrentState;
 use crate::attention::AttentionVariant;
 use crate::tensor::Tensor;
+use crate::util::bytes::{ByteReader, ByteWriter, CodecError};
+use std::path::PathBuf;
+
+/// Spill-tier configuration: where evicted session state goes and how
+/// much disk it may occupy. Disabled by default — eviction then
+/// destroys state and the next step answers `NeedsReprefill`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SpillConfig {
+    /// Master switch for the disk tier.
+    pub enabled: bool,
+    /// Spill directory; `None` picks a per-process temp dir. Setting a
+    /// dir without `enabled` is a config error (builder-validated).
+    pub dir: Option<PathBuf>,
+    /// Byte budget for on-disk spill files. Oldest spilled sessions
+    /// are dropped (second-level eviction) to make room. Zero means
+    /// "use the default" when built through `EngineConfig::builder()`.
+    pub max_bytes: u64,
+}
+
+impl SpillConfig {
+    /// Default on-disk budget when `max_bytes` is left at 0.
+    pub const DEFAULT_MAX_BYTES: u64 = 256 << 20;
+
+    /// An enabled tier with the default budget, spilling to `dir`.
+    pub fn enabled_in(dir: PathBuf) -> Self {
+        Self {
+            enabled: true,
+            dir: Some(dir),
+            max_bytes: Self::DEFAULT_MAX_BYTES,
+        }
+    }
+}
 
 /// Decode-subsystem configuration (engine-level).
 #[derive(Clone, Debug, PartialEq)]
@@ -44,6 +76,8 @@ pub struct DecodeConfig {
     /// Max decode steps the engine serves ahead of due prefill batches
     /// in one drive cycle (the decode/prefill mixing knob).
     pub max_steps_per_cycle: usize,
+    /// Disk spill tier for evicted sessions.
+    pub spill: SpillConfig,
 }
 
 impl Default for DecodeConfig {
@@ -58,6 +92,7 @@ impl Default for DecodeConfig {
             max_session_bytes: 64 << 20,
             max_sessions: 256,
             max_steps_per_cycle: 64,
+            spill: SpillConfig::default(),
         }
     }
 }
@@ -230,6 +265,83 @@ impl DecodeSession {
             len: new_len,
         }
     }
+
+    /// Serialize this layer's state bit-exactly (spill path): header,
+    /// branch tag, then each head's KV cache or moment accumulators.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u32(self.heads as u32);
+        w.put_u32(self.d as u32);
+        w.put_u64(self.len as u64);
+        match self.promoted_at {
+            Some(at) => {
+                w.put_u8(1);
+                w.put_u64(at as u64);
+            }
+            None => w.put_u8(0),
+        }
+        match &self.branch {
+            Branch::Kv(caches) => {
+                w.put_u8(0);
+                for cache in caches {
+                    cache.encode(w);
+                }
+            }
+            Branch::Recurrent(states) => {
+                w.put_u8(1);
+                for state in states {
+                    state.encode(w);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`DecodeSession::encode`]. Structural validation
+    /// only; payload integrity is the spill layer's checksum.
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self, CodecError> {
+        let heads = r.get_u32()? as usize;
+        let d = r.get_u32()? as usize;
+        if heads == 0 || d == 0 || heads > 1 << 12 {
+            return Err(CodecError::Invalid { what: "session shape" });
+        }
+        let len = r.get_u64()? as usize;
+        let promoted_at = match r.get_u8()? {
+            0 => None,
+            1 => Some(r.get_u64()? as usize),
+            tag => return Err(CodecError::BadTag { what: "promoted_at", tag }),
+        };
+        let branch = match r.get_u8()? {
+            0 => {
+                let mut caches = Vec::with_capacity(heads);
+                for _ in 0..heads {
+                    let cache = KvCache::decode(r)?;
+                    if cache.head_dim() != d || cache.len() != len {
+                        return Err(CodecError::Invalid { what: "kv head state" });
+                    }
+                    caches.push(cache);
+                }
+                Branch::Kv(caches)
+            }
+            1 => {
+                let mut states = Vec::with_capacity(heads);
+                for _ in 0..heads {
+                    let state = RecurrentState::decode(r)?;
+                    if state.head_dim() != d || state.len() != len {
+                        return Err(CodecError::Invalid { what: "recurrent head state" });
+                    }
+                    states.push(state);
+                }
+                Branch::Recurrent(states)
+            }
+            tag => return Err(CodecError::BadTag { what: "branch", tag }),
+        };
+        Ok(Self {
+            heads,
+            d,
+            len,
+            branch,
+            promoted_at,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +401,41 @@ mod tests {
             }
         }
         assert_eq!(session.promoted_at(), Some(10));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_across_promotion() {
+        let (heads, d, tau) = (2usize, 4usize, 1.0f32);
+        for promote_first in [false, true] {
+            let mut session = DecodeSession::new(heads, d, tau, false);
+            for t in 0..8 {
+                let (q, k, v) = qkv(heads, d, 500 + t * 7);
+                session.step(&q, &k, &v, None);
+            }
+            if promote_first {
+                session.promote();
+            }
+            let mut w = crate::util::bytes::ByteWriter::new();
+            session.encode(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = crate::util::bytes::ByteReader::new(&bytes);
+            let mut back = DecodeSession::decode(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0);
+            assert_eq!(back.len(), session.len());
+            assert_eq!(back.branch(), session.branch());
+            assert_eq!(back.promoted_at(), session.promoted_at());
+            assert_eq!(back.state_bytes(), session.state_bytes());
+            // Future steps must be bit-exact against the original.
+            let (q, k, v) = qkv(heads, d, 900);
+            let a = session.step(&q, &k, &v, None);
+            let b = back.step(&q, &k, &v, None);
+            let eq = a
+                .output
+                .iter()
+                .zip(&b.output)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "promote_first={promote_first}: restored step must be bit-exact");
+        }
     }
 
     #[test]

@@ -48,11 +48,13 @@
 //! `close_stream`).
 
 pub mod block;
+pub mod spill;
 pub mod store;
 pub mod streaming;
 
 pub use block::{layer_norm, Block};
-pub use store::{SessionStore, SessionSummary, StepMiss, StepOutcome};
+pub use spill::{SpillError, SpilledSession};
+pub use store::{Eviction, RestoreReport, SessionStore, SessionSummary, StepMiss, StepOutcome};
 pub use streaming::{LayerStep, ModelSession, ModelStepResult, StreamingModel};
 
 use crate::decode::DecodeConfig;

@@ -1,0 +1,328 @@
+//! Spill-file persistence for evicted decode sessions.
+//!
+//! When the byte-budgeted [`super::SessionStore`] evicts a session and
+//! the spill tier is enabled, the whole per-layer state stack is
+//! serialized to a single file and the next `decode_step` touching the
+//! id restores it transparently — the resident → spilled → restored
+//! lifecycle. Because the recurrent branch is O(d³) flat in N, a
+//! spilled long-context session is small and cheap to rehydrate.
+//!
+//! ## File format (version 1, little-endian)
+//!
+//! ```text
+//! magic    4 B   b"TSSP"
+//! version  4 B   u32 = 1
+//! checksum 8 B   FNV-1a 64 of the payload bytes
+//! length   8 B   payload byte count
+//! payload  …     session id u64 · trace id u64 · ModelSession encoding
+//! ```
+//!
+//! Floats travel as raw IEEE-754 bits so a restore is **bit-exact**
+//! with never-evicted state — the streaming parity guarantee survives
+//! the disk round trip. A file that fails magic/version/checksum/shape
+//! validation yields a typed [`SpillError`]; the store then deletes it
+//! and degrades to the pre-spill behaviour (`NeedsReprefill`). All
+//! fallible paths return errors — this module is in taylor-lint R3
+//! (no-panic) scope.
+
+use std::path::Path;
+
+use crate::util::bytes::{fnv1a, ByteReader, ByteWriter, CodecError};
+
+use super::streaming::{ModelSession, StreamingModel};
+
+/// First four bytes of every spill file.
+pub const SPILL_MAGIC: [u8; 4] = *b"TSSP";
+/// Current on-disk format version.
+pub const SPILL_VERSION: u32 = 1;
+/// Fixed header size: magic + version + checksum + payload length.
+pub const SPILL_HEADER_BYTES: u64 = 4 + 4 + 8 + 8;
+
+/// Why a spill write or restore failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpillError {
+    /// Filesystem error (message carried; `std::io::Error` is not
+    /// `Clone`/`PartialEq`).
+    Io(String),
+    /// File shorter than the fixed header.
+    Truncated,
+    /// First four bytes are not `TSSP`.
+    BadMagic,
+    /// Header version this build does not understand.
+    BadVersion { found: u32 },
+    /// Payload bytes do not hash to the header checksum.
+    ChecksumMismatch { expected: u64, found: u64 },
+    /// Header length disagrees with the actual payload size.
+    LengthMismatch { expected: u64, found: u64 },
+    /// Payload structure invalid or inconsistent with the model.
+    Codec(CodecError),
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(msg) => write!(f, "spill io error: {msg}"),
+            Self::Truncated => write!(f, "spill file truncated"),
+            Self::BadMagic => write!(f, "spill file has bad magic"),
+            Self::BadVersion { found } => {
+                write!(f, "spill file version {found} (expected {SPILL_VERSION})")
+            }
+            Self::ChecksumMismatch { expected, found } => write!(
+                f,
+                "spill checksum mismatch (header {expected:#018x}, payload {found:#018x})"
+            ),
+            Self::LengthMismatch { expected, found } => write!(
+                f,
+                "spill payload length mismatch (header {expected}, file {found})"
+            ),
+            Self::Codec(e) => write!(f, "spill payload invalid: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+impl From<CodecError> for SpillError {
+    fn from(e: CodecError) -> Self {
+        Self::Codec(e)
+    }
+}
+
+/// A session rehydrated from disk.
+pub struct SpilledSession {
+    /// Stream id recorded at spill time.
+    pub id: u64,
+    /// Trace id recorded at spill time — restore continues the same
+    /// trace, so the flight recorder shows one stream end to end.
+    pub trace: u64,
+    /// The restored per-layer state stack.
+    pub session: ModelSession,
+}
+
+/// Size in bytes a spill of `session` would occupy on disk, without
+/// serializing — used by the store's spill-budget admission check.
+pub fn spill_file_size(session: &ModelSession) -> u64 {
+    let mut w = ByteWriter::new();
+    session.encode(&mut w);
+    SPILL_HEADER_BYTES + 16 + w.len() as u64
+}
+
+/// Serialize `session` to `path` (creating parent dirs as needed) and
+/// return the file size in bytes.
+pub fn write_spill(
+    path: &Path,
+    id: u64,
+    trace: u64,
+    session: &ModelSession,
+) -> Result<u64, SpillError> {
+    let mut payload = ByteWriter::new();
+    payload.put_u64(id);
+    payload.put_u64(trace);
+    session.encode(&mut payload);
+    let payload = payload.into_bytes();
+
+    let mut file = ByteWriter::new();
+    file.put_u32(u32::from_le_bytes(SPILL_MAGIC));
+    file.put_u32(SPILL_VERSION);
+    file.put_u64(fnv1a(&payload));
+    file.put_u64(payload.len() as u64);
+    let mut bytes = file.into_bytes();
+    bytes.extend_from_slice(&payload);
+
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).map_err(|e| SpillError::Io(e.to_string()))?;
+    }
+    let len = bytes.len() as u64;
+    std::fs::write(path, &bytes).map_err(|e| SpillError::Io(e.to_string()))?;
+    Ok(len)
+}
+
+/// Read, validate, and decode a spill file. Validation order: magic,
+/// version, payload length, checksum, then structural decode against
+/// `model` — so corruption is attributed to the earliest broken layer.
+pub fn read_spill(path: &Path, model: &StreamingModel) -> Result<SpilledSession, SpillError> {
+    let bytes = std::fs::read(path).map_err(|e| SpillError::Io(e.to_string()))?;
+    if (bytes.len() as u64) < SPILL_HEADER_BYTES {
+        return Err(SpillError::Truncated);
+    }
+    let mut r = ByteReader::new(&bytes);
+    let magic = r.get_u32().map_err(|_| SpillError::Truncated)?;
+    if magic.to_le_bytes() != SPILL_MAGIC {
+        return Err(SpillError::BadMagic);
+    }
+    let version = r.get_u32().map_err(|_| SpillError::Truncated)?;
+    if version != SPILL_VERSION {
+        return Err(SpillError::BadVersion { found: version });
+    }
+    let checksum = r.get_u64().map_err(|_| SpillError::Truncated)?;
+    let payload_len = r.get_u64().map_err(|_| SpillError::Truncated)?;
+    let found_len = r.remaining() as u64;
+    if payload_len != found_len {
+        return Err(SpillError::LengthMismatch {
+            expected: payload_len,
+            found: found_len,
+        });
+    }
+    let payload = &bytes[SPILL_HEADER_BYTES as usize..];
+    let found = fnv1a(payload);
+    if found != checksum {
+        return Err(SpillError::ChecksumMismatch {
+            expected: checksum,
+            found,
+        });
+    }
+    let mut r = ByteReader::new(payload);
+    let id = r.get_u64().map_err(SpillError::from)?;
+    let trace = r.get_u64().map_err(SpillError::from)?;
+    let session = ModelSession::decode(&mut r, model)?;
+    if r.remaining() != 0 {
+        return Err(SpillError::Codec(CodecError::Invalid {
+            what: "trailing bytes after session",
+        }));
+    }
+    Ok(SpilledSession { id, trace, session })
+}
+
+/// Best-effort spill-file removal; the store calls this on restore,
+/// close, tombstone aging, and corruption — a failed unlink only
+/// leaks disk, never correctness.
+pub fn remove_spill(path: &Path) {
+    let _ = std::fs::remove_file(path);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::DecodeConfig;
+    use crate::model::ModelConfig;
+    use crate::tensor::Tensor;
+    use std::path::PathBuf;
+
+    fn test_model() -> StreamingModel {
+        let decode = DecodeConfig {
+            heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            ..DecodeConfig::default()
+        };
+        StreamingModel::new(ModelConfig::from_decode(&decode, 4))
+    }
+
+    fn test_session(model: &StreamingModel, steps: usize) -> ModelSession {
+        let mut session =
+            ModelSession::with_thresholds(model, &[false, false], vec![Some(3.0), None]);
+        let x = Tensor::randn(&[steps, model.d_model()], 99);
+        for t in 0..steps {
+            let token = Tensor::new(&[1, model.d_model()], x.row(t).to_vec());
+            model.step(&mut session, &token);
+        }
+        session
+    }
+
+    fn temp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ts-spill-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_restores_id_trace_and_state() {
+        let model = test_model();
+        let session = test_session(&model, 5);
+        let want_bytes = session.state_bytes();
+        let path = temp_path("roundtrip.spill");
+        let file_bytes = write_spill(&path, 7, 0xabcd, &session).unwrap();
+        assert_eq!(file_bytes, spill_file_size(&session));
+        let back = read_spill(&path, &model).unwrap();
+        remove_spill(&path);
+        assert_eq!(back.id, 7);
+        assert_eq!(back.trace, 0xabcd);
+        assert_eq!(back.session.len(), session.len());
+        assert_eq!(back.session.state_bytes(), want_bytes);
+        assert_eq!(back.session.branches(), session.branches());
+    }
+
+    #[test]
+    fn corrupt_payload_fails_checksum() {
+        let model = test_model();
+        let session = test_session(&model, 4);
+        let path = temp_path("corrupt.spill");
+        write_spill(&path, 1, 2, &session).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_spill(&path, &model).unwrap_err();
+        remove_spill(&path);
+        assert!(matches!(err, SpillError::ChecksumMismatch { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn truncated_file_reports_length_mismatch() {
+        let model = test_model();
+        let session = test_session(&model, 4);
+        let path = temp_path("truncated.spill");
+        write_spill(&path, 1, 2, &session).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let err = read_spill(&path, &model).unwrap_err();
+        remove_spill(&path);
+        assert!(matches!(err, SpillError::LengthMismatch { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn header_smaller_than_fixed_size_is_truncated() {
+        let path = temp_path("tiny.spill");
+        std::fs::write(&path, b"TSS").unwrap();
+        let err = read_spill(&path, &test_model()).unwrap_err();
+        remove_spill(&path);
+        assert_eq!(err, SpillError::Truncated);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let model = test_model();
+        let session = test_session(&model, 3);
+        let path = temp_path("magic.spill");
+        write_spill(&path, 1, 2, &session).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert_eq!(read_spill(&path, &model).unwrap_err(), SpillError::BadMagic);
+
+        let mut bad = good.clone();
+        bad[4] = 9; // version 9
+        std::fs::write(&path, &bad).unwrap();
+        assert_eq!(
+            read_spill(&path, &model).unwrap_err(),
+            SpillError::BadVersion { found: 9 }
+        );
+        remove_spill(&path);
+    }
+
+    #[test]
+    fn wrong_model_shape_is_codec_error() {
+        let model = test_model();
+        let session = test_session(&model, 3);
+        let path = temp_path("shape.spill");
+        write_spill(&path, 1, 2, &session).unwrap();
+        let deeper = StreamingModel::new(ModelConfig::from_decode(
+            &DecodeConfig {
+                heads: 2,
+                n_layers: 3,
+                d_ff: 24,
+                ..DecodeConfig::default()
+            },
+            4,
+        ));
+        let err = read_spill(&path, &deeper).unwrap_err();
+        remove_spill(&path);
+        assert!(matches!(err, SpillError::Codec(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let err = read_spill(&temp_path("nope.spill"), &test_model()).unwrap_err();
+        assert!(matches!(err, SpillError::Io(_)));
+    }
+}

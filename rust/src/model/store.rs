@@ -1,51 +1,104 @@
-//! LRU-evicting, byte-budgeted store of resident [`ModelSession`]s.
+//! LRU-evicting, byte-budgeted store of resident [`ModelSession`]s,
+//! with an optional disk spill tier.
 //!
 //! Byte accounting sums every layer's decode state (KV caches grow
 //! with the prefix; recurrent moments are flat), so a long-prefix
 //! unpromoted stream weighs L times its single-layer cost. When the
 //! budget or the session cap is exceeded, least-recently-used sessions
-//! are evicted — and remembered, so a client stepping an evicted
-//! stream gets a typed [`StepMiss::Evicted`] ("re-prefill required")
-//! instead of a panic or a silently fresh state.
+//! are evicted.
+//!
+//! What eviction *means* depends on the spill tier
+//! ([`crate::decode::SpillConfig`]):
+//!
+//! * **Spill disabled** — the state is destroyed and remembered as a
+//!   tombstone; a client stepping the id gets a typed
+//!   [`StepMiss::Evicted`] ("re-prefill required").
+//! * **Spill enabled** — the state is serialized to a checksummed
+//!   spill file under the spill byte budget (oldest spill files are
+//!   dropped to make room — second-level eviction), and the next step
+//!   touching the id **restores it transparently**, evicting other
+//!   residents as needed. `Evicted` then only surfaces when the spill
+//!   budget pushed the file out, and [`StepMiss::SpillFailed`] when
+//!   the file fails checksum/version/shape validation.
+//!
+//! The lifecycle is resident → spilled → restored; restores are
+//! bit-exact (see `model/spill.rs`), so a restored stream is
+//! indistinguishable from one that was never evicted.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
-use crate::decode::DecodeConfig;
+use crate::decode::{DecodeConfig, SpillConfig};
 use crate::tensor::Tensor;
 
+use super::spill::{self, SpillError};
 use super::streaming::{ModelSession, ModelStepResult, StreamingModel};
 use super::ModelConfig;
 
 /// Why a store-level step could not run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StepMiss {
     /// The id was never opened (or was closed normally).
     Unknown,
-    /// The session was LRU-evicted under memory pressure; the client
-    /// must re-prefill before streaming again.
+    /// The session was LRU-evicted and its state is gone (spill
+    /// disabled, spill budget exhausted, or a failed restore); the
+    /// client must re-prefill before streaming again.
     Evicted,
+    /// The session had a spill file but restoring it failed
+    /// validation; the file has been deleted and the session is now
+    /// hard-evicted. Carries the typed reason.
+    SpillFailed(SpillError),
+}
+
+/// One session pushed out of residency during an operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Eviction {
+    pub id: u64,
+    /// Resident state bytes freed.
+    pub bytes: u64,
+    /// True iff the state survived to a spill file (restorable);
+    /// false means the state was destroyed.
+    pub spilled: bool,
+}
+
+/// Accounting for a transparent restore performed by [`SessionStore::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct RestoreReport {
+    /// Resident state bytes rehydrated from disk.
+    pub bytes: u64,
+    /// Wall time of the read+validate+decode.
+    pub elapsed: Duration,
 }
 
 /// Outcome of a store-level decode step.
 pub struct StepOutcome {
     pub result: ModelStepResult,
-    /// Sessions LRU-evicted to make room during this operation.
-    pub evicted: Vec<u64>,
+    /// Sessions pushed out of residency to make room during this
+    /// operation (spilled or destroyed — see [`Eviction::spilled`]).
+    pub evicted: Vec<Eviction>,
+    /// Present iff this step transparently restored the session from
+    /// its spill file first.
+    pub restored: Option<RestoreReport>,
 }
 
 /// Closing summary for a finished session.
 #[derive(Clone, Debug)]
 pub struct SessionSummary {
     pub tokens: usize,
-    /// Branch serving each layer at close time.
+    /// Branch serving each layer at close time (for a non-resident
+    /// session: the branches at eviction time).
     pub branches: Vec<AttentionVariant>,
     pub bytes: u64,
     /// Per-layer promotion points (`None` = layer stayed KV).
     pub promoted_at: Vec<Option<usize>>,
     /// The session's observability trace ID.
     pub trace: u64,
+    /// True iff the session was closed while evicted or spilled — the
+    /// summary then reports what was known at eviction time.
+    pub evicted: bool,
 }
 
 struct Resident {
@@ -53,8 +106,34 @@ struct Resident {
     last_used: u64,
     bytes: u64,
     /// Observability trace ID minted at open; every span and
-    /// flight-recorder event for this stream carries it.
+    /// flight-recorder event for this stream carries it. Survives the
+    /// spill round trip, so one stream stays one trace.
     trace: u64,
+}
+
+/// On-disk record backing a spilled tombstone.
+struct SpillRecord {
+    path: PathBuf,
+    file_bytes: u64,
+}
+
+/// What the store remembers about a non-resident session.
+struct Tombstone {
+    trace: u64,
+    tokens: usize,
+    branches: Vec<AttentionVariant>,
+    promoted_at: Vec<Option<usize>>,
+    state_bytes: u64,
+    /// `Some` while the state lives in a restorable spill file.
+    spill: Option<SpillRecord>,
+}
+
+/// Process-wide tag so two stores sharing a spill dir (each minting
+/// stream ids from 1) never collide on file names.
+fn next_store_tag() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Keeps whole-model streaming sessions resident under a byte budget.
@@ -64,15 +143,25 @@ pub struct SessionStore {
     selector: Selector,
     forced: Option<AttentionVariant>,
     sessions: HashMap<u64, Resident>,
-    evicted_ids: HashSet<u64>,
+    evicted: HashMap<u64, Tombstone>,
+    /// Tombstone ages, FIFO (both spilled and destroyed).
     evicted_order: VecDeque<u64>,
+    /// Spilled ids in spill order — the second-level eviction queue.
+    spill_order: VecDeque<u64>,
+    /// Resolved spill directory (None iff spill disabled).
+    spill_dir: Option<PathBuf>,
+    /// On-disk budget for spill files.
+    spill_budget: u64,
+    store_tag: u64,
     clock: u64,
     resident_bytes: u64,
+    spilled_bytes: u64,
 }
 
 impl SessionStore {
     /// Bound on remembered evictions: old entries age out FIFO so the
-    /// tombstone set cannot grow without limit.
+    /// tombstone set cannot grow without limit (aging a spilled
+    /// tombstone deletes its file).
     const EVICTED_MEMORY: usize = 1024;
 
     /// `forced` mirrors the engine's variant override: `Direct` pins
@@ -86,16 +175,33 @@ impl SessionStore {
         forced: Option<AttentionVariant>,
     ) -> Self {
         let model = StreamingModel::new(ModelConfig::from_decode(&cfg, head_dim));
+        let spill_dir = if cfg.spill.enabled {
+            Some(cfg.spill.dir.clone().unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("taylorshift-spill-{}", std::process::id()))
+            }))
+        } else {
+            None
+        };
+        let spill_budget = if cfg.spill.max_bytes == 0 {
+            SpillConfig::DEFAULT_MAX_BYTES
+        } else {
+            cfg.spill.max_bytes
+        };
         Self {
             cfg,
             model,
             selector,
             forced,
             sessions: HashMap::new(),
-            evicted_ids: HashSet::new(),
+            evicted: HashMap::new(),
             evicted_order: VecDeque::new(),
+            spill_order: VecDeque::new(),
+            spill_dir,
+            spill_budget,
+            store_tag: next_store_tag(),
             clock: 0,
             resident_bytes: 0,
+            spilled_bytes: 0,
         }
     }
 
@@ -122,23 +228,43 @@ impl SessionStore {
         self.resident_bytes
     }
 
+    /// Sessions currently parked in spill files.
+    pub fn spilled_sessions(&self) -> usize {
+        self.spill_order.len()
+    }
+
+    /// On-disk bytes currently held by spill files.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
     pub fn contains(&self, id: u64) -> bool {
         self.sessions.contains_key(&id)
     }
 
-    /// True iff `id` was LRU-evicted (and not reopened since).
+    /// True iff `id` was LRU-evicted (spilled or destroyed) and not
+    /// reopened since.
     pub fn was_evicted(&self, id: u64) -> bool {
-        self.evicted_ids.contains(&id)
+        self.evicted.contains_key(&id)
     }
 
-    /// The observability trace ID of a resident session.
+    /// True iff `id` currently has a restorable spill file.
+    pub fn was_spilled(&self, id: u64) -> bool {
+        self.evicted.get(&id).is_some_and(|t| t.spill.is_some())
+    }
+
+    /// The observability trace ID of a session — resident or spilled
+    /// or tombstoned; a stream keeps one trace for its whole life.
     pub fn trace_of(&self, id: u64) -> Option<u64> {
-        self.sessions.get(&id).map(|r| r.trace)
+        self.sessions
+            .get(&id)
+            .map(|r| r.trace)
+            .or_else(|| self.evicted.get(&id).map(|t| t.trace))
     }
 
-    /// Open (or reset) a session. Returns ids evicted to fit it.
-    pub fn open(&mut self, id: u64) -> Vec<u64> {
-        self.forget_eviction(id);
+    /// Open (or reset) a session. Returns sessions evicted to fit it.
+    pub fn open(&mut self, id: u64) -> Vec<Eviction> {
+        self.forget_tombstone(id);
         if let Some(old) = self.sessions.remove(&id) {
             self.resident_bytes -= old.bytes;
         }
@@ -158,13 +284,28 @@ impl SessionStore {
         self.enforce_budget(Some(id))
     }
 
-    /// One whole-model decode step for session `id`.
+    /// One whole-model decode step for session `id`. A spilled session
+    /// is restored from disk first — transparently, under the
+    /// `decode.restore` span — so callers only see a miss when the
+    /// state is actually gone.
     pub fn step(&mut self, id: u64, token: &Tensor) -> Result<StepOutcome, StepMiss> {
         self.clock += 1;
+        let mut restored = None;
+        let mut restore_evictions = Vec::new();
+        if !self.sessions.contains_key(&id) {
+            match self.restore(id) {
+                Ok(Some((report, evicted))) => {
+                    restored = Some(report);
+                    restore_evictions = evicted;
+                }
+                Ok(None) => {}
+                Err(miss) => return Err(miss),
+            }
+        }
         let clock = self.clock;
         let model = &self.model;
         let Some(entry) = self.sessions.get_mut(&id) else {
-            return Err(if self.evicted_ids.contains(&id) {
+            return Err(if self.evicted.contains_key(&id) {
                 StepMiss::Evicted
             } else {
                 StepMiss::Unknown
@@ -177,22 +318,117 @@ impl SessionStore {
         entry.last_used = clock;
         // `before` is included in the resident total, so this never underflows.
         self.resident_bytes = self.resident_bytes - before + after;
-        let evicted = self.enforce_budget(Some(id));
-        Ok(StepOutcome { result, evicted })
+        let mut evicted = restore_evictions;
+        evicted.extend(self.enforce_budget(Some(id)));
+        Ok(StepOutcome {
+            result,
+            evicted,
+            restored,
+        })
     }
 
-    /// Drop a session normally, returning its closing summary. A
-    /// closed session is *not* recorded as evicted — stepping it again
-    /// yields [`StepMiss::Unknown`].
+    /// Rehydrate `id` from its spill file if it has one. `Ok(None)`
+    /// means there was nothing to restore (unknown or hard-evicted id
+    /// — the caller reports the precise miss). A file failing
+    /// validation is deleted, the tombstone downgrades to
+    /// hard-evicted, and the typed reason surfaces as
+    /// [`StepMiss::SpillFailed`].
+    fn restore(&mut self, id: u64) -> Result<Option<(RestoreReport, Vec<Eviction>)>, StepMiss> {
+        if !self.was_spilled(id) {
+            return Ok(None);
+        }
+        let _restore_span = crate::obs::span("decode.restore");
+        let started = std::time::Instant::now();
+        let Some(mut tomb) = self.evicted.remove(&id) else {
+            return Ok(None);
+        };
+        let Some(record) = tomb.spill.take() else {
+            self.evicted.insert(id, tomb);
+            return Ok(None);
+        };
+        self.spill_order.retain(|&s| s != id);
+        self.spilled_bytes = self.spilled_bytes.saturating_sub(record.file_bytes);
+        let loaded = spill::read_spill(&record.path, &self.model).and_then(|s| {
+            if s.id == id {
+                Ok(s)
+            } else {
+                Err(SpillError::Codec(crate::util::bytes::CodecError::Invalid {
+                    what: "session id mismatch",
+                }))
+            }
+        });
+        spill::remove_spill(&record.path);
+        match loaded {
+            Ok(spilled) => {
+                self.evicted_order.retain(|&e| e != id);
+                let bytes = spilled.session.state_bytes();
+                self.resident_bytes += bytes;
+                self.sessions.insert(
+                    id,
+                    Resident {
+                        session: spilled.session,
+                        last_used: self.clock,
+                        bytes,
+                        // Keep the trace minted at open: the restored
+                        // stream continues the same trace.
+                        trace: spilled.trace,
+                    },
+                );
+                crate::obs::recorder::record_event(
+                    crate::obs::recorder::EventKind::Restore,
+                    spilled.trace,
+                    id,
+                    bytes,
+                );
+                let evicted = self.enforce_budget(Some(id));
+                Ok(Some((
+                    RestoreReport {
+                        bytes,
+                        elapsed: started.elapsed(),
+                    },
+                    evicted,
+                )))
+            }
+            Err(err) => {
+                // Downgrade to a hard tombstone: the next step (after
+                // this error) reports Evicted, and reopening re-prefills.
+                self.evicted.insert(id, tomb);
+                Err(StepMiss::SpillFailed(err))
+            }
+        }
+    }
+
+    /// Drop a session normally, returning its closing summary. Works
+    /// on evicted-or-spilled sessions too: the summary then carries
+    /// what was known at eviction time (`evicted: true`) and the spill
+    /// file, if any, is cleaned up. A closed session is forgotten —
+    /// stepping it again yields [`StepMiss::Unknown`].
     pub fn close(&mut self, id: u64) -> Option<SessionSummary> {
-        let entry = self.sessions.remove(&id)?;
-        self.resident_bytes -= entry.bytes;
+        if let Some(entry) = self.sessions.remove(&id) {
+            self.resident_bytes -= entry.bytes;
+            return Some(SessionSummary {
+                tokens: entry.session.len(),
+                branches: entry.session.branches(),
+                bytes: entry.bytes,
+                promoted_at: entry.session.promoted_at(),
+                trace: entry.trace,
+                evicted: false,
+            });
+        }
+        let tomb = self.evicted.remove(&id)?;
+        self.evicted_order.retain(|&e| e != id);
+        if let Some(record) = &tomb.spill {
+            self.spill_order.retain(|&s| s != id);
+            self.spilled_bytes = self.spilled_bytes.saturating_sub(record.file_bytes);
+            spill::remove_spill(&record.path);
+        }
         Some(SessionSummary {
-            tokens: entry.session.len(),
-            branches: entry.session.branches(),
-            bytes: entry.bytes,
-            promoted_at: entry.session.promoted_at(),
-            trace: entry.trace,
+            tokens: tomb.tokens,
+            branches: tomb.branches,
+            bytes: tomb.state_bytes,
+            promoted_at: tomb.promoted_at,
+            trace: tomb.trace,
+            evicted: true,
         })
     }
 
@@ -213,27 +449,88 @@ impl SessionStore {
         (kv, recurrent)
     }
 
-    fn forget_eviction(&mut self, id: u64) {
-        if self.evicted_ids.remove(&id) {
+    fn spill_path(&self, dir: &PathBuf, id: u64) -> PathBuf {
+        dir.join(format!("s{}-{id}.spill", self.store_tag))
+    }
+
+    fn forget_tombstone(&mut self, id: u64) {
+        if let Some(tomb) = self.evicted.remove(&id) {
             self.evicted_order.retain(|&e| e != id);
+            if let Some(record) = &tomb.spill {
+                self.spill_order.retain(|&s| s != id);
+                self.spilled_bytes = self.spilled_bytes.saturating_sub(record.file_bytes);
+                spill::remove_spill(&record.path);
+            }
         }
     }
 
-    fn record_eviction(&mut self, id: u64) {
-        if self.evicted_ids.insert(id) {
+    fn record_tombstone(&mut self, id: u64, tomb: Tombstone) {
+        let spilled = tomb.spill.is_some();
+        if self.evicted.insert(id, tomb).is_none() {
             self.evicted_order.push_back(id);
-            while self.evicted_order.len() > Self::EVICTED_MEMORY {
-                if let Some(old) = self.evicted_order.pop_front() {
-                    self.evicted_ids.remove(&old);
+        }
+        if spilled {
+            self.spill_order.push_back(id);
+        }
+        while self.evicted_order.len() > Self::EVICTED_MEMORY {
+            let Some(old) = self.evicted_order.pop_front() else {
+                break;
+            };
+            if let Some(aged) = self.evicted.remove(&old) {
+                if let Some(record) = &aged.spill {
+                    self.spill_order.retain(|&s| s != old);
+                    self.spilled_bytes = self.spilled_bytes.saturating_sub(record.file_bytes);
+                    spill::remove_spill(&record.path);
                 }
             }
         }
     }
 
+    /// Second-level eviction: drop oldest spill files until `needed`
+    /// extra bytes fit the spill budget. Dropped sessions downgrade to
+    /// hard tombstones (their next step is `Evicted`).
+    fn make_spill_room(&mut self, needed: u64) -> bool {
+        if needed > self.spill_budget {
+            return false;
+        }
+        while self.spilled_bytes + needed > self.spill_budget {
+            let Some(old) = self.spill_order.pop_front() else {
+                break;
+            };
+            if let Some(tomb) = self.evicted.get_mut(&old) {
+                if let Some(record) = tomb.spill.take() {
+                    self.spilled_bytes = self.spilled_bytes.saturating_sub(record.file_bytes);
+                    spill::remove_spill(&record.path);
+                }
+            }
+        }
+        self.spilled_bytes + needed <= self.spill_budget
+    }
+
+    /// Park an evicted session's state on disk. Returns the spill
+    /// record, or `None` when the tier is disabled, the file cannot
+    /// fit the budget, or the write fails (hard eviction).
+    fn try_spill(&mut self, id: u64, trace: u64, session: &ModelSession) -> Option<SpillRecord> {
+        let dir = self.spill_dir.clone()?;
+        let needed = spill::spill_file_size(session);
+        if !self.make_spill_room(needed) {
+            return None;
+        }
+        let path = self.spill_path(&dir, id);
+        match spill::write_spill(&path, id, trace, session) {
+            Ok(file_bytes) => {
+                self.spilled_bytes += file_bytes;
+                Some(SpillRecord { path, file_bytes })
+            }
+            Err(_) => None,
+        }
+    }
+
     /// Evict LRU sessions until both the byte budget and the session
-    /// cap hold. The session named by `protect` (the one being
-    /// operated on) is never evicted.
-    fn enforce_budget(&mut self, protect: Option<u64>) -> Vec<u64> {
+    /// cap hold; each victim is spilled to disk when the tier allows
+    /// it. The session named by `protect` (the one being operated on)
+    /// is never evicted.
+    fn enforce_budget(&mut self, protect: Option<u64>) -> Vec<Eviction> {
         let mut evicted = Vec::new();
         loop {
             let over_bytes = self.resident_bytes > self.cfg.max_session_bytes;
@@ -257,16 +554,44 @@ impl SessionStore {
                 break;
             };
             self.resident_bytes -= gone.bytes;
-            crate::obs::recorder::record_event(
-                crate::obs::recorder::EventKind::Evict,
-                gone.trace,
+            let record = self.try_spill(victim, gone.trace, &gone.session);
+            let spilled = record.is_some();
+            let (kind, detail) = if spilled {
+                (crate::obs::recorder::EventKind::Spill, gone.bytes)
+            } else {
+                (crate::obs::recorder::EventKind::Evict, gone.bytes)
+            };
+            crate::obs::recorder::record_event(kind, gone.trace, victim, detail);
+            self.record_tombstone(
                 victim,
-                gone.bytes,
+                Tombstone {
+                    trace: gone.trace,
+                    tokens: gone.session.len(),
+                    branches: gone.session.branches(),
+                    promoted_at: gone.session.promoted_at(),
+                    state_bytes: gone.bytes,
+                    spill: record,
+                },
             );
-            self.record_eviction(victim);
-            evicted.push(victim);
+            evicted.push(Eviction {
+                id: victim,
+                bytes: gone.bytes,
+                spilled,
+            });
         }
         evicted
+    }
+}
+
+impl Drop for SessionStore {
+    /// Spill files are per-store scratch state; remove them so a
+    /// dropped engine leaves no disk residue.
+    fn drop(&mut self) {
+        for tomb in self.evicted.values() {
+            if let Some(record) = &tomb.spill {
+                spill::remove_spill(&record.path);
+            }
+        }
     }
 }
 
@@ -283,8 +608,16 @@ mod tests {
         }
     }
 
+    fn spill_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ts-store-test-{}-{name}", std::process::id()))
+    }
+
     fn token(d_model: usize, seed: u64) -> Tensor {
         Tensor::randn(&[1, d_model], seed)
+    }
+
+    fn ids(evicted: &[Eviction]) -> Vec<u64> {
+        evicted.iter().map(|e| e.id).collect()
     }
 
     #[test]
@@ -313,8 +646,9 @@ mod tests {
         }
         assert!(!all_evicted.is_empty(), "budget never triggered eviction");
         assert!(store.resident_bytes() <= store.config().max_session_bytes);
+        assert!(all_evicted.iter().all(|e| !e.spilled), "spill disabled");
         // Evicted sessions miss with the typed re-prefill error.
-        let gone = all_evicted[0];
+        let gone = all_evicted[0].id;
         assert_eq!(store.step(gone, &t).unwrap_err(), StepMiss::Evicted);
     }
 
@@ -328,7 +662,7 @@ mod tests {
         assert!(store.open(1).is_empty());
         assert!(store.open(2).is_empty());
         let evicted = store.open(3);
-        assert_eq!(evicted, vec![1], "oldest session evicted");
+        assert_eq!(ids(&evicted), vec![1], "oldest session evicted");
         assert_eq!(store.len(), 2);
     }
 
@@ -344,7 +678,7 @@ mod tests {
         store.open(2);
         store.step(1, &t).unwrap(); // 1 is now most recent
         let evicted = store.open(3);
-        assert_eq!(evicted, vec![2]);
+        assert_eq!(ids(&evicted), vec![2]);
         assert!(store.contains(1) && store.contains(3));
     }
 
@@ -402,6 +736,7 @@ mod tests {
         assert_eq!(summary.tokens, 3);
         assert_eq!(summary.branches.len(), 2);
         assert_eq!(summary.promoted_at.len(), 2);
+        assert!(!summary.evicted);
         assert_eq!(store.resident_bytes(), 0);
         assert!(store.close(9).is_none());
         // Closed ≠ evicted: the next step is Unknown, not Evicted.
@@ -423,7 +758,7 @@ mod tests {
         let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
         store.open(1);
         let evicted = store.open(2);
-        assert_eq!(evicted, vec![1]);
+        assert_eq!(ids(&evicted), vec![1]);
         assert!(store.was_evicted(1));
         let t = token(4, 2);
         assert_eq!(store.step(1, &t).unwrap_err(), StepMiss::Evicted);
@@ -450,5 +785,194 @@ mod tests {
         let (kv, recurrent) = store.layer_occupancy();
         assert_eq!(kv, vec![2, 2]);
         assert_eq!(recurrent, vec![0, 0]);
+    }
+
+    #[test]
+    fn spilled_session_restores_transparently() {
+        let dir = spill_dir("restore");
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            spill: crate::decode::SpillConfig::enabled_in(dir.clone()),
+            ..small_cfg()
+        };
+        let d = 4usize;
+        let mut store = SessionStore::new(cfg, d, Selector::analytical(), None);
+        let t = token(d, 2);
+        store.open(1);
+        let trace1 = store.trace_of(1).unwrap();
+        for _ in 0..5 {
+            store.step(1, &t).unwrap();
+        }
+        let evicted = store.open(2);
+        assert_eq!(evicted.len(), 1);
+        assert!(evicted[0].spilled, "spill tier should have caught the victim");
+        assert!(store.was_spilled(1));
+        assert_eq!(store.spilled_sessions(), 1);
+        assert!(store.spilled_bytes() > 0);
+        assert_eq!(store.trace_of(1), Some(trace1), "trace survives the spill");
+
+        // The next step restores transparently and evicts session 2.
+        let out = store.step(1, &t).unwrap();
+        let report = out.restored.expect("step should report the restore");
+        assert!(report.bytes > 0);
+        assert_eq!(out.result.len, 6, "restored stream continues at its length");
+        assert_eq!(ids(&out.evicted), vec![2]);
+        assert!(!store.was_evicted(1));
+        assert_eq!(store.spilled_sessions(), 1, "victim 2 spilled in turn");
+        assert_eq!(store.trace_of(1), Some(trace1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restored_stream_is_bit_exact_with_uninterrupted() {
+        let dir = spill_dir("bitexact");
+        let d = 4usize;
+        let spill_cfg = DecodeConfig {
+            max_sessions: 1,
+            spill: crate::decode::SpillConfig::enabled_in(dir.clone()),
+            ..small_cfg()
+        };
+        let big_cfg = small_cfg();
+        let mut spilled = SessionStore::new(spill_cfg, d, Selector::analytical(), None);
+        let mut reference = SessionStore::new(big_cfg, d, Selector::analytical(), None);
+        spilled.open(1);
+        reference.open(1);
+        for s in 0..12u64 {
+            let t = token(d, 100 + s);
+            if s == 6 {
+                spilled.open(2); // force the spill mid-stream
+            }
+            let a = spilled.step(1, &t).unwrap();
+            let b = reference.step(1, &t).unwrap();
+            let eq = a
+                .result
+                .output
+                .iter()
+                .zip(&b.result.output)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "step {} diverged after spill round trip", s + 1);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_budget_exhaustion_hard_evicts_oldest() {
+        let dir = spill_dir("budget");
+        let d = 4usize;
+        let t = token(d, 3);
+        // Measure what one 1-step session's spill file costs, then set
+        // the budget so exactly one such file fits — not two.
+        let probe_model = StreamingModel::new(ModelConfig::from_decode(&small_cfg(), d));
+        let mut probe = ModelSession::new(&probe_model, &Selector::analytical(), None);
+        probe_model.step(&mut probe, &t);
+        let one_file = super::spill::spill_file_size(&probe);
+        let mut spill = crate::decode::SpillConfig::enabled_in(dir.clone());
+        spill.max_bytes = one_file + one_file / 2;
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            spill,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(cfg, d, Selector::analytical(), None);
+        store.open(1);
+        store.step(1, &t).unwrap();
+        store.open(2); // spills 1
+        assert!(store.was_spilled(1));
+        store.step(2, &t).unwrap();
+        store.open(3); // spills 2, which needs room: 1's file is dropped
+        assert!(store.was_spilled(2));
+        assert!(store.was_evicted(1));
+        assert!(!store.was_spilled(1), "oldest spill dropped for room");
+        assert_eq!(store.step(1, &t).unwrap_err(), StepMiss::Evicted);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_file_fails_typed_then_evicted() {
+        let dir = spill_dir("corrupt");
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            spill: crate::decode::SpillConfig::enabled_in(dir.clone()),
+            ..small_cfg()
+        };
+        let d = 4usize;
+        let mut store = SessionStore::new(cfg, d, Selector::analytical(), None);
+        let t = token(d, 5);
+        store.open(1);
+        store.step(1, &t).unwrap();
+        store.open(2);
+        assert!(store.was_spilled(1));
+        // Flip a payload byte in the (single) spill file.
+        let entries: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(entries.len(), 1);
+        let mut bytes = std::fs::read(&entries[0]).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&entries[0], &bytes).unwrap();
+
+        let err = store.step(1, &t).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                StepMiss::SpillFailed(SpillError::ChecksumMismatch { .. })
+            ),
+            "got {err:?}"
+        );
+        // The file is gone and the session downgraded to hard-evicted.
+        assert!(!store.was_spilled(1));
+        assert_eq!(store.spilled_sessions(), 0);
+        assert_eq!(store.step(1, &t).unwrap_err(), StepMiss::Evicted);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn close_on_spilled_session_reports_and_cleans_up() {
+        let dir = spill_dir("close");
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            spill: crate::decode::SpillConfig::enabled_in(dir.clone()),
+            ..small_cfg()
+        };
+        let d = 4usize;
+        let mut store = SessionStore::new(cfg, d, Selector::analytical(), None);
+        let t = token(d, 6);
+        store.open(1);
+        for _ in 0..4 {
+            store.step(1, &t).unwrap();
+        }
+        let trace1 = store.trace_of(1).unwrap();
+        store.open(2);
+        assert!(store.was_spilled(1));
+        let summary = store.close(1).expect("close must work on a spilled session");
+        assert!(summary.evicted);
+        assert_eq!(summary.tokens, 4);
+        assert_eq!(summary.trace, trace1);
+        assert_eq!(summary.branches.len(), 1);
+        assert_eq!(store.spilled_sessions(), 0, "spill file cleaned up");
+        assert_eq!(store.spilled_bytes(), 0);
+        // Closed is forgotten entirely.
+        assert_eq!(store.step(1, &t).unwrap_err(), StepMiss::Unknown);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn close_on_hard_evicted_session_reports_known_state() {
+        let cfg = DecodeConfig {
+            max_sessions: 1,
+            ..small_cfg()
+        };
+        let mut store = SessionStore::new(cfg, 4, Selector::analytical(), None);
+        let t = token(4, 8);
+        store.open(1);
+        store.step(1, &t).unwrap();
+        store.step(1, &t).unwrap();
+        store.open(2); // hard-evicts 1 (spill disabled)
+        let summary = store.close(1).expect("close must work on an evicted session");
+        assert!(summary.evicted);
+        assert_eq!(summary.tokens, 2);
+        assert!(store.close(1).is_none());
     }
 }

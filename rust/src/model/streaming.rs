@@ -12,6 +12,7 @@ use crate::attention::selector::Selector;
 use crate::attention::AttentionVariant;
 use crate::decode::DecodeSession;
 use crate::tensor::Tensor;
+use crate::util::bytes::{ByteReader, ByteWriter, CodecError};
 
 use super::block::Block;
 use super::ModelConfig;
@@ -113,6 +114,59 @@ impl ModelSession {
     /// promoting token), `None` for layers still on KV.
     pub fn promoted_at(&self) -> Vec<Option<usize>> {
         self.layers.iter().map(DecodeSession::promoted_at).collect()
+    }
+
+    /// Serialize the whole per-layer state stack bit-exactly (the
+    /// spill payload body): stream length, then each layer's threshold
+    /// and decode state.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.len as u64);
+        w.put_u32(self.layers.len() as u32);
+        for (layer, threshold) in self.layers.iter().zip(&self.thresholds) {
+            match threshold {
+                Some(t) => {
+                    w.put_u8(1);
+                    w.put_f64(*t);
+                }
+                None => w.put_u8(0),
+            }
+            layer.encode(w);
+        }
+    }
+
+    /// Inverse of [`ModelSession::encode`], validated against the
+    /// model the session will be stepped with: layer count, heads, and
+    /// head dim must all match or the restore is rejected.
+    pub fn decode(r: &mut ByteReader<'_>, model: &StreamingModel) -> Result<Self, CodecError> {
+        let cfg = model.config();
+        let len = r.get_u64()? as usize;
+        let n_layers = r.get_u32()? as usize;
+        if n_layers != cfg.n_layers {
+            return Err(CodecError::Invalid { what: "layer count" });
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut thresholds = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let threshold = match r.get_u8()? {
+                0 => None,
+                1 => Some(r.get_f64()?),
+                tag => return Err(CodecError::BadTag { what: "threshold", tag }),
+            };
+            let layer = DecodeSession::decode(r)?;
+            if layer.heads() != cfg.heads || layer.head_dim() != cfg.head_dim {
+                return Err(CodecError::Invalid { what: "layer shape vs model" });
+            }
+            if layer.len() != len {
+                return Err(CodecError::Invalid { what: "layer length vs stream" });
+            }
+            thresholds.push(threshold);
+            layers.push(layer);
+        }
+        Ok(Self {
+            layers,
+            thresholds,
+            len,
+        })
     }
 }
 
@@ -266,6 +320,54 @@ mod tests {
         model.step(&mut session, &token);
         assert!(session.state_bytes() > fresh, "KV layers grow with tokens");
         assert_eq!(session.len(), 1);
+    }
+
+    #[test]
+    fn session_encode_decode_roundtrip_is_bit_exact() {
+        let model = small_model(2);
+        let thresholds = vec![Some(3.0f64), None];
+        let mut session = ModelSession::with_thresholds(&model, &[false, false], thresholds);
+        let x = Tensor::randn(&[9, model.d_model()], 777);
+        for t in 0..6 {
+            let token = Tensor::new(&[1, model.d_model()], x.row(t).to_vec());
+            model.step(&mut session, &token);
+        }
+        let mut w = crate::util::bytes::ByteWriter::new();
+        session.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::util::bytes::ByteReader::new(&bytes);
+        let mut back = ModelSession::decode(&mut r, &model).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.len(), session.len());
+        assert_eq!(back.branches(), session.branches());
+        assert_eq!(back.promoted_at(), session.promoted_at());
+        assert_eq!(back.thresholds, session.thresholds);
+        for t in 6..9 {
+            let token = Tensor::new(&[1, model.d_model()], x.row(t).to_vec());
+            let a = model.step(&mut session, &token);
+            let b = model.step(&mut back, &token);
+            let eq = a
+                .output
+                .iter()
+                .zip(&b.output)
+                .all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(eq, "step {} diverged after restore", t + 1);
+        }
+    }
+
+    #[test]
+    fn session_decode_rejects_wrong_model_shape() {
+        let model = small_model(2);
+        let mut session =
+            ModelSession::with_thresholds(&model, &[false, false], vec![None, None]);
+        let token = Tensor::randn(&[1, model.d_model()], 5);
+        model.step(&mut session, &token);
+        let mut w = crate::util::bytes::ByteWriter::new();
+        session.encode(&mut w);
+        let bytes = w.into_bytes();
+        let other = small_model(3);
+        let mut r = crate::util::bytes::ByteReader::new(&bytes);
+        assert!(ModelSession::decode(&mut r, &other).is_err());
     }
 
     #[test]

@@ -19,7 +19,8 @@ use super::span::{Rec, NO_LAYER};
 /// - `decode.kv_step` — attention step served on the KV branch
 /// - `decode.recurrent_step` — attention step served recurrent
 /// - `decode.promote` — one-time KV→recurrent promotion build
-pub const SPAN_NAMES: [&str; 8] = [
+/// - `decode.restore` — spill-file read+validate+decode on touch
+pub const SPAN_NAMES: [&str; 9] = [
     "engine.exec_batch",
     "batcher.queue_wait",
     "lane.queue_wait",
@@ -28,6 +29,7 @@ pub const SPAN_NAMES: [&str; 8] = [
     "decode.kv_step",
     "decode.recurrent_step",
     "decode.promote",
+    "decode.restore",
 ];
 
 /// Per-layer histograms kept for `model.block_step`; deeper layers

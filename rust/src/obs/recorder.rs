@@ -28,6 +28,12 @@ pub enum EventKind {
     Evict,
     /// A typed error surfaced (`a` = error code, `b` = session id).
     Error,
+    /// The store evicted a session to a spill file
+    /// (`a` = session id, `b` = state bytes parked on disk).
+    Spill,
+    /// A spilled session was restored on touch
+    /// (`a` = session id, `b` = resident bytes rehydrated).
+    Restore,
 }
 
 impl EventKind {
@@ -39,6 +45,8 @@ impl EventKind {
             EventKind::Promote => 3,
             EventKind::Evict => 4,
             EventKind::Error => 5,
+            EventKind::Spill => 6,
+            EventKind::Restore => 7,
         }
     }
 
@@ -50,6 +58,8 @@ impl EventKind {
             3 => Some(EventKind::Promote),
             4 => Some(EventKind::Evict),
             5 => Some(EventKind::Error),
+            6 => Some(EventKind::Spill),
+            7 => Some(EventKind::Restore),
             _ => None,
         }
     }
@@ -63,6 +73,8 @@ impl EventKind {
             EventKind::Promote => "promote",
             EventKind::Evict => "evict",
             EventKind::Error => "error",
+            EventKind::Spill => "spill",
+            EventKind::Restore => "restore",
         }
     }
 }
@@ -71,6 +83,7 @@ impl EventKind {
 pub const ERR_EXEC_FAILED: u64 = 1;
 pub const ERR_NEEDS_REPREFILL: u64 = 2;
 pub const ERR_UNKNOWN_SESSION: u64 = 3;
+pub const ERR_SPILL_CORRUPT: u64 = 4;
 
 /// Human label for an error code.
 pub fn error_code_label(code: u64) -> &'static str {
@@ -78,6 +91,7 @@ pub fn error_code_label(code: u64) -> &'static str {
         ERR_EXEC_FAILED => "exec_failed",
         ERR_NEEDS_REPREFILL => "needs_reprefill",
         ERR_UNKNOWN_SESSION => "unknown_session",
+        ERR_SPILL_CORRUPT => "spill_corrupt",
         _ => "unknown",
     }
 }

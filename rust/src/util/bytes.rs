@@ -1,0 +1,241 @@
+//! Little-endian binary codec for state serialization.
+//!
+//! The spill/restore tier (`model/spill.rs`) persists decode state to
+//! disk and the streaming parity guarantee demands the round trip be
+//! **bit-exact**: floats are encoded as their raw IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`), never formatted or re-rounded, so
+//! an f64 Taylor-moment accumulator restores to the identical value.
+//! Readers return typed [`CodecError`]s instead of panicking — decoded
+//! bytes come from disk and may be arbitrarily corrupt.
+
+/// Why a decode failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ended before the value was complete.
+    Truncated,
+    /// An enum/option tag byte had no defined meaning.
+    BadTag { what: &'static str, tag: u8 },
+    /// A decoded value violated a structural invariant.
+    Invalid { what: &'static str },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated => write!(f, "byte stream truncated"),
+            Self::BadTag { what, tag } => write!(f, "bad tag {tag} for {what}"),
+            Self::Invalid { what } => write!(f, "invalid encoded value: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Append-only little-endian writer over a byte vector.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bit-exact f32: raw IEEE-754 bits, no rounding.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Bit-exact f64: raw IEEE-754 bits, no rounding.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32_slice(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+
+    pub fn put_f64_slice(&mut self, vs: &[f64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f64(v);
+        }
+    }
+}
+
+/// Cursor-based little-endian reader with typed errors.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self.pos.checked_add(n).ok_or(CodecError::Truncated)?;
+        let slice = self.buf.get(self.pos..end).ok_or(CodecError::Truncated)?;
+        self.pos = end;
+        Ok(slice)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(b);
+        Ok(u32::from_le_bytes(a))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Length-prefixed f32 slice; `max_len` bounds the allocation so a
+    /// corrupt length cannot trigger an absurd reservation.
+    pub fn get_f32_vec(&mut self, max_len: usize) -> Result<Vec<f32>, CodecError> {
+        let n = self.get_u64()? as usize;
+        if n > max_len || n > self.remaining() / 4 {
+            return Err(CodecError::Invalid { what: "f32 slice length" });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed f64 slice; `max_len` bounds the allocation.
+    pub fn get_f64_vec(&mut self, max_len: usize) -> Result<Vec<f64>, CodecError> {
+        let n = self.get_u64()? as usize;
+        if n > max_len || n > self.remaining() / 8 {
+            return Err(CodecError::Invalid { what: "f64 slice length" });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+}
+
+/// FNV-1a 64-bit hash — the spill-file payload checksum. Not
+/// cryptographic; it detects torn writes and bit rot, which is all the
+/// restore path needs before trusting a file.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(f32::from_bits(0x7f80_0001)); // signalling NaN pattern
+        w.put_f64(-0.0);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f32().unwrap().to_bits(), 0x7f80_0001);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let f32s = vec![1.5f32, -2.25, 0.1];
+        let f64s = vec![1.0f64 / 3.0, f64::MIN_POSITIVE];
+        let mut w = ByteWriter::new();
+        w.put_f32_slice(&f32s);
+        w.put_f64_slice(&f64s);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_f32_vec(16).unwrap(), f32s);
+        assert_eq!(r.get_f64_vec(16).unwrap(), f64s);
+    }
+
+    #[test]
+    fn truncated_reads_are_typed() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert_eq!(r.get_u64().unwrap_err(), CodecError::Truncated);
+    }
+
+    #[test]
+    fn oversized_slice_length_rejected() {
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // absurd length prefix
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(matches!(
+            r.get_f64_vec(1024).unwrap_err(),
+            CodecError::Invalid { .. }
+        ));
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+    }
+}

@@ -2,6 +2,7 @@
 //! crates.io access beyond the `xla` closure): PRNG, JSON, thread pool,
 //! statistics, and CLI parsing.
 
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod numeric;

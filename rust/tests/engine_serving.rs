@@ -16,22 +16,21 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
 fn start_engine(buckets: Vec<usize>) -> Option<Engine> {
     let dir = artifacts_dir()?;
     let b = buckets.clone();
+    let cfg = EngineConfig::builder()
+        .buckets(buckets)
+        .head_dim(16)
+        .policy(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+        })
+        .queue_limit(128)
+        .selector(taylorshift::attention::selector::Selector::analytical())
+        .build()
+        .expect("valid engine config");
     Some(
-        Engine::start_with(
-            EngineConfig {
-                buckets,
-                head_dim: 16,
-                policy: BatchPolicy {
-                    max_batch: 8,
-                    max_delay: Duration::from_millis(2),
-                },
-                queue_limit: 128,
-                forced_variant: None,
-                selector: taylorshift::attention::selector::Selector::analytical(),
-                ..EngineConfig::default()
-            },
-            move || RegistryExecutor::new(dir, "serve", &b, &[1, 8]),
-        )
+        Engine::start_with(cfg, move || {
+            RegistryExecutor::new(dir, "serve", &b, &[1, 8])
+        })
         .unwrap(),
     )
 }
@@ -79,21 +78,21 @@ fn direct_and_efficient_artifacts_agree_via_engine() {
         taylorshift::attention::AttentionVariant::Efficient,
     ] {
         let d = dir.clone();
-        let engine = Engine::start_with(
-            EngineConfig {
-                buckets: vec![128],
-                head_dim: 16,
-                policy: BatchPolicy {
-                    max_batch: 1,
-                    max_delay: Duration::ZERO,
-                },
-                queue_limit: 16,
-                forced_variant: Some(variant),
-                selector: taylorshift::attention::selector::Selector::analytical(),
-                ..EngineConfig::default()
-            },
-            move || RegistryExecutor::new(d, "serve", &[128], &[1, 8]),
-        )
+        let cfg = EngineConfig::builder()
+            .buckets(vec![128])
+            .head_dim(16)
+            .policy(BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+            })
+            .queue_limit(16)
+            .forced_variant(variant)
+            .selector(taylorshift::attention::selector::Selector::analytical())
+            .build()
+            .expect("valid engine config");
+        let engine = Engine::start_with(cfg, move || {
+            RegistryExecutor::new(d, "serve", &[128], &[1, 8])
+        })
         .unwrap();
         logits.push(engine.infer(tokens.clone()).unwrap().logits);
     }

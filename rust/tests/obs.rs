@@ -108,7 +108,11 @@ fn promotion_trace_spans_carry_one_trace_end_to_end() {
         .all(|e| e.layer == Some(0)));
 
     // The promotion also landed as a lifecycle event on the ring.
-    assert!(events.iter().any(|e| e.kind == EventKind::Promote && e.trace == trace && e.a == sid));
+    assert!(events
+        .iter()
+        .any(|e| e.kind == EventKind::Promote && e.trace == trace && e.a == sid.id()));
+    // The handle returned at open already carries the same trace.
+    assert_eq!(sid.trace(), trace);
 
     // The close-stream stats return the same trace for correlation.
     let stats = engine.close_stream(sid).unwrap();
@@ -215,12 +219,15 @@ fn eviction_error_surfaces_flight_recorder_dump() {
     // Opening a second stream under max_sessions=1 evicts s1.
     let s2 = engine.submit_stream().unwrap();
     let err = engine.decode_step(s1, Tensor::randn(&[1, d], 2)).unwrap_err();
-    assert_eq!(err, RequestError::NeedsReprefill { id: s1 });
+    assert_eq!(err, RequestError::NeedsReprefill { id: s1.id() });
 
     let dump = engine.last_error_dump().expect("dump after typed error");
     let parsed = Json::parse(&dump).expect("dump is valid JSON");
     assert_eq!(parsed.get("error").and_then(Json::as_str), Some("needs_reprefill"));
-    assert_eq!(parsed.get("subject").and_then(Json::as_f64), Some(s1 as f64));
+    assert_eq!(
+        parsed.get("subject").and_then(Json::as_f64),
+        Some(s1.id() as f64)
+    );
     let events = parsed.get("events").and_then(Json::as_arr).unwrap();
     assert!(!events.is_empty(), "dump carries the leading events");
     let boundary = parsed.get("seq").and_then(Json::as_f64).unwrap();
@@ -230,7 +237,7 @@ fn eviction_error_surfaces_flight_recorder_dump() {
 
     // The eviction itself is on the ring as a lifecycle event.
     let ring = recorder::global().snapshot();
-    assert!(ring.iter().any(|e| e.kind == EventKind::Evict && e.a == s1));
+    assert!(ring.iter().any(|e| e.kind == EventKind::Evict && e.a == s1.id()));
 
     // The surviving stream still decodes.
     engine.decode_step(s2, Tensor::randn(&[1, d], 3)).unwrap();

@@ -1,0 +1,280 @@
+//! Integration tests for the session spill/restore tier: an
+//! evict→spill→restore stream must be BIT-exact with an uninterrupted
+//! stream at every prefix (including promotion happening before and
+//! after the interruptions), corrupt/truncated spill files must fail
+//! with typed errors plus a flight-recorder event, and closing a
+//! spilled stream must report what is known and clean up its file.
+//!
+//! Own test binary on purpose: the flight recorder is process-global,
+//! so assertions filter by session/trace ID, and every test uses its
+//! own spill directory.
+
+use std::sync::atomic::Ordering;
+
+use taylorshift::attention::selector::Selector;
+use taylorshift::coordinator::engine::{BatchExecutor, Engine, EngineConfig};
+use taylorshift::coordinator::request::RequestError;
+use taylorshift::coordinator::router::Route;
+use taylorshift::decode::DecodeConfig;
+use taylorshift::obs::prometheus::validate_exposition;
+use taylorshift::obs::recorder::{self, ERR_SPILL_CORRUPT, EventKind};
+use taylorshift::tensor::Tensor;
+
+/// Minimal prefill executor (these tests only exercise decode).
+struct NullExec;
+
+impl BatchExecutor for NullExec {
+    fn execute(&mut self, _route: Route, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(tokens.iter().map(|_| vec![0.0; 4]).collect())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &[1, 8]
+    }
+}
+
+const D: usize = 16;
+
+fn spill_dir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ts-spill-it-{}-{}", std::process::id(), name))
+}
+
+/// Engine with heads=1, 2 layers, crossover calibrated at N₀ = 8, and
+/// an optional spill tier. `max_sessions: 1` plus a throwaway second
+/// stream is how tests force an eviction at a chosen step.
+fn engine_with(max_sessions: usize, spill: Option<std::path::PathBuf>) -> Engine {
+    let mut b = EngineConfig::builder()
+        .head_dim(D)
+        .selector(Selector::calibrated(vec![(D, 8.0)]))
+        .decode(DecodeConfig {
+            heads: 1,
+            n_layers: 2,
+            d_ff: 16,
+            max_sessions,
+            ..DecodeConfig::default()
+        });
+    if let Some(dir) = spill {
+        b = b.spill_enabled(true).spill_dir(dir);
+    }
+    Engine::start_with(b.build().expect("valid config"), || Ok(NullExec)).expect("engine starts")
+}
+
+fn token(t: usize) -> Tensor {
+    Tensor::randn(&[1, D], 31_000 + t as u64)
+}
+
+/// The only `.spill` file in `dir` (panics if there isn't exactly one).
+fn only_spill_file(dir: &std::path::Path) -> std::path::PathBuf {
+    let files: Vec<_> = std::fs::read_dir(dir)
+        .expect("spill dir exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+        .collect();
+    assert_eq!(files.len(), 1, "expected exactly one spill file: {files:?}");
+    files.into_iter().next().unwrap()
+}
+
+/// Tentpole property: a stream that is spilled to disk and restored —
+/// once on the KV branch (before promotion at step 8) and once on the
+/// recurrent branch (after it) — produces BIT-identical outputs to a
+/// never-interrupted stream at every prefix. f64 Taylor moments and
+/// f32 KV rows both round-trip exactly, so this is `to_bits`
+/// equality, not approximate.
+#[test]
+fn spilled_stream_is_bit_exact_with_uninterrupted_at_every_prefix() {
+    let dir = spill_dir("bitexact");
+    let reference = engine_with(256, None);
+    let interrupted = engine_with(1, Some(dir.clone()));
+
+    let r = reference.submit_stream().unwrap();
+    let s = interrupted.submit_stream().unwrap();
+    let steps = 16usize;
+    // Spill the main stream before promotion (after step 4) and again
+    // after promotion (after step 11) by touching a throwaway stream
+    // under max_sessions = 1.
+    for t in 0..steps {
+        if t == 4 || t == 11 {
+            let bump = interrupted.submit_stream().unwrap();
+            interrupted.decode_step(bump, token(900 + t)).unwrap();
+            assert!(
+                interrupted.metrics().sessions_spilled.load(Ordering::Relaxed) >= 1,
+                "main stream parked on disk at step {t}"
+            );
+        }
+        let want = reference.decode_step(r, token(t)).unwrap();
+        let got = interrupted.decode_step(s, token(t)).unwrap();
+        assert_eq!(got.step, t + 1, "restored stream continues its prefix");
+        assert_eq!(got.promoted, want.promoted, "promotion parity at step {t}");
+        assert_eq!(got.output.len(), want.output.len());
+        for (i, (a, b)) in want.output.iter().zip(&got.output).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "step {} output[{i}]: {a} vs {b}",
+                t + 1
+            );
+        }
+    }
+
+    let m = interrupted.metrics();
+    assert_eq!(
+        m.sessions_restored.load(Ordering::Relaxed),
+        2,
+        "one restore per interruption"
+    );
+    assert_eq!(m.spill_failures.load(Ordering::Relaxed), 0);
+    assert_eq!(m.decode_misses.load(Ordering::Relaxed), 0, "never NeedsReprefill");
+    assert_eq!(m.restore_latency.count(), 2);
+
+    // Both engines agree on the close-time summary of the main stream.
+    let want = reference.close_stream(r).unwrap();
+    let got = interrupted.close_stream(s).unwrap();
+    assert_eq!(got.tokens, want.tokens);
+    assert_eq!(got.branches, want.branches);
+    assert_eq!(got.promoted_at, want.promoted_at);
+    assert!(!got.evicted, "resident at close");
+
+    // The spill/restore series scrape and validate.
+    let text = interrupted.scrape();
+    validate_exposition(&text).expect("exposition validates");
+    for needle in [
+        "taylorshift_sessions_spilled_total",
+        "taylorshift_sessions_restored_total 2",
+        "taylorshift_spill_failures_total 0",
+        "taylorshift_restore_latency_us",
+        "taylorshift_restored_state_bytes",
+    ] {
+        assert!(text.contains(needle), "scrape missing {needle}");
+    }
+
+    drop(interrupted);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A corrupt spill file fails restore with a typed error: the step
+/// answers `NeedsReprefill`, `spill_failures` increments, the flight
+/// recorder carries an `ERR_SPILL_CORRUPT` error event, and the
+/// last-error dump names it.
+#[test]
+fn corrupt_spill_file_surfaces_typed_error_and_event() {
+    let dir = spill_dir("corrupt");
+    let engine = engine_with(1, Some(dir.clone()));
+
+    let s1 = engine.submit_stream().unwrap();
+    engine.decode_step(s1, token(0)).unwrap();
+    let s2 = engine.submit_stream().unwrap();
+    engine.decode_step(s2, token(1)).unwrap();
+
+    // Flip the last payload byte of s1's spill file.
+    let path = only_spill_file(&dir);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = engine.decode_step(s1, token(2)).unwrap_err();
+    assert_eq!(err, RequestError::NeedsReprefill { id: s1.id() });
+    let m = engine.metrics();
+    assert_eq!(m.spill_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(m.sessions_restored.load(Ordering::Relaxed), 0);
+
+    // The failed file was deleted — the id is now hard-evicted, and a
+    // second touch is ordinary NeedsReprefill without a spill failure.
+    assert!(!path.exists(), "corrupt file cleaned up");
+    let err = engine.decode_step(s1, token(3)).unwrap_err();
+    assert_eq!(err, RequestError::NeedsReprefill { id: s1.id() });
+    assert_eq!(m.spill_failures.load(Ordering::Relaxed), 1, "counted once");
+
+    // Flight recorder: an error event coded spill_corrupt for s1.
+    let ring = recorder::global().snapshot();
+    let hit = ring
+        .iter()
+        .any(|e| e.kind == EventKind::Error && e.a == ERR_SPILL_CORRUPT && e.b == s1.id());
+    assert!(hit, "spill_corrupt error event on the ring");
+    let dump = engine.last_error_dump().expect("typed error recorded");
+    assert!(dump.contains("spill_corrupt"), "{dump}");
+
+    drop(engine);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A truncated spill file (simulated partial write / disk-full) also
+/// fails typed rather than panicking or restoring garbage.
+#[test]
+fn truncated_spill_file_fails_typed() {
+    let dir = spill_dir("truncated");
+    let engine = engine_with(1, Some(dir.clone()));
+
+    let s1 = engine.submit_stream().unwrap();
+    engine.decode_step(s1, token(0)).unwrap();
+    let s2 = engine.submit_stream().unwrap();
+    engine.decode_step(s2, token(1)).unwrap();
+
+    let path = only_spill_file(&dir);
+    let len = std::fs::metadata(&path).unwrap().len();
+    let file = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    file.set_len(len / 2).unwrap();
+    drop(file);
+
+    let err = engine.decode_step(s1, token(2)).unwrap_err();
+    assert_eq!(err, RequestError::NeedsReprefill { id: s1.id() });
+    assert_eq!(engine.metrics().spill_failures.load(Ordering::Relaxed), 1);
+    assert!(!path.exists(), "truncated file cleaned up");
+
+    // The untouched stream still decodes fine.
+    engine.decode_step(s2, token(3)).unwrap();
+
+    drop(engine);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Satellite fix: closing an evicted-or-spilled stream succeeds with
+/// the known summary instead of erroring, and removes the spill file.
+#[test]
+fn close_stream_on_spilled_session_reports_and_cleans_up() {
+    let dir = spill_dir("close");
+    let engine = engine_with(1, Some(dir.clone()));
+
+    let s1 = engine.submit_stream().unwrap();
+    for t in 0..3 {
+        engine.decode_step(s1, token(t)).unwrap();
+    }
+    let s2 = engine.submit_stream().unwrap();
+    engine.decode_step(s2, token(10)).unwrap();
+    let path = only_spill_file(&dir);
+
+    let stats = engine.close_stream(s1).unwrap();
+    assert!(stats.evicted, "closed from the spilled state");
+    assert_eq!(stats.tokens, 3, "tokens served before the spill");
+    assert_eq!(stats.trace, s1.trace());
+    assert!(!path.exists(), "close removed the spill file");
+    assert_eq!(
+        engine.metrics().spill_file_bytes.load(Ordering::Relaxed),
+        0,
+        "on-disk gauge back to zero"
+    );
+
+    // Closing it again is an ordinary unknown-session error.
+    assert!(matches!(
+        engine.close_stream(s1),
+        Err(RequestError::UnknownSession { .. })
+    ));
+
+    drop(engine);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The one-release `u64` compatibility shim: raw ids stored from
+/// `SessionHandle::id()` keep working across decode and close.
+#[test]
+fn raw_u64_session_ids_still_work() {
+    let engine = engine_with(4, None);
+    let handle = engine.submit_stream().unwrap();
+    let raw: u64 = handle.id();
+    let resp = engine.decode_step(raw, token(0)).unwrap();
+    assert_eq!(resp.step, 1);
+    let stats = engine.close_stream(raw).unwrap();
+    assert_eq!(stats.tokens, 1);
+    assert!(!stats.evicted);
+}
